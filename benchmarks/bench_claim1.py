@@ -1,0 +1,32 @@
+"""Claim 1: pull-based HomT idle time <= one task duration on the slowest
+node — simulated idle vs analytic bound over heterogeneous clusters."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import BenchRow, timed
+from repro.core.straggler import claim1_bound, verify_claim1
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    rng = np.random.default_rng(0)
+    for n_nodes, n_tasks in [(2, 8), (4, 32), (8, 64), (16, 256)]:
+        speeds = rng.uniform(0.2, 2.0, n_nodes).tolist()
+        (idle, bound, ok), us = timed(verify_claim1, 200.0, n_tasks, speeds)
+        out.append(BenchRow(
+            f"claim1/nodes{n_nodes}_tasks{n_tasks}", us,
+            f"idle={idle:.3f};bound={bound:.3f};holds={ok};"
+            f"tightness={idle / bound:.2f}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Figs 13-15: burstable (token-bucket) executors under three bandwidth
+regimes. Node a: credit-rich (full speed); node b: zero credits (baseline
+0.4 advertised, ~0.32 effective due to cache/TLB contention — the paper's
+learned fudge factor).
+
+Fig 13 (~600 Mbps) and Fig 14 (~480 Mbps): CPU-bound — fudge-corrected
+HeMT beats the best HomT. Fig 15 (~250 Mbps): datanode uplink becomes the
+bottleneck for the fast node — HeMT >> HomT because microtasks collide on
+uplinks (Claim 2)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchRow
+from repro.core.simulator import SimNode, hemt_job, homt_job
+
+# Calibrated so the credit-rich node processes ~45 MB/s of input: CPU-bound
+# at 600/480 Mbps uplinks (75/60 MB/s), network-bound at 250 Mbps (31 MB/s)
+# — the paper's three regimes.
+WORK = 45.0           # CPU work units (seconds at full speed)
+IO_MB = 2048.0        # 2 GB input
+OVERHEAD = 0.3
+
+
+def _nodes(true_slow: float):
+    return [SimNode.constant("a", 1.0, OVERHEAD),
+            SimNode.constant("b", true_slow, OVERHEAD)]
+
+
+def _regime(name: str, bw_mbps: float) -> List[BenchRow]:
+    out = []
+    bw = bw_mbps / 8.0              # MB/s per uplink
+    nodes = _nodes(0.32)            # TRUE effective speed
+    for n_tasks in (2, 8, 32):
+        res = homt_job(nodes, WORK, n_tasks, io_mb_total=IO_MB, uplink_bw=bw)
+        out.append(BenchRow(f"{name}/homt_tasks{n_tasks}", 0.0,
+                            f"stage_s={res.completion:.1f}"))
+    naive = hemt_job(nodes, WORK, [1.0, 0.4], io_mb_total=IO_MB, uplink_bw=bw)
+    out.append(BenchRow(f"{name}/hemt_naive_1:0.4", 0.0,
+                        f"stage_s={naive.completion:.1f};"
+                        f"idle_s={naive.idle_time:.1f}"))
+    fudged = hemt_job(nodes, WORK, [1.0, 0.32], io_mb_total=IO_MB, uplink_bw=bw)
+    out.append(BenchRow(f"{name}/hemt_fudged_1:0.32", 0.0,
+                        f"stage_s={fudged.completion:.1f};"
+                        f"idle_s={fudged.idle_time:.1f}"))
+    return out
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    out += _regime("fig13_600mbps", 600.0)
+    out += _regime("fig14_480mbps", 480.0)
+    out += _regime("fig15_250mbps", 250.0)
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig 17: K-Means, 30 iterations, two executors at 1.0 / 0.4 cores.
+Real JAX math; completion times from the calibrated executor model.
+Paper: HeMT ~10% faster than the default even split end-to-end."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import BenchRow, timed
+from repro.core.simulator import SimNode
+from repro.workloads.kmeans import KMeansJob, kmeans_reference
+
+ITERS = 30
+
+
+def _nodes():
+    return [SimNode.constant("a", 1.0, overhead=0.2),
+            SimNode.constant("b", 0.4, overhead=0.2)]
+
+
+def rows() -> List[BenchRow]:
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(2000, 8))
+    ref = kmeans_reference(pts, k=8, iters=ITERS)
+
+    out = []
+    times = {}
+    for mode, kw in (("hemt", {"weights": [1.0, 0.4]}),
+                     ("even", {}),
+                     ("homt8", {"n_tasks": 8}),
+                     ("homt32", {"n_tasks": 32})):
+        m = mode.rstrip("0123456789")
+        job = KMeansJob(pts, 8, _nodes(), mode=m, work_per_point=2e-3, **kw)
+        cent, us = timed(job.run, ITERS, repeat=1)
+        err = float(np.max(np.abs(np.asarray(cent) - ref)))
+        times[mode] = job.total_time()
+        out.append(BenchRow(f"fig17/{mode}", us,
+                            f"finish_s={job.total_time():.1f};"
+                            f"centroid_err={err:.1e}"))
+    gain = (times["even"] - times["hemt"]) / times["even"] * 100
+    best_homt = min(times["homt8"], times["homt32"])
+    gain_homt = (best_homt - times["hemt"]) / best_homt * 100
+    out.append(BenchRow("fig17/summary", 0.0,
+                        f"hemt_vs_even_pct={gain:.1f};"
+                        f"hemt_vs_best_homt_pct={gain_homt:.1f}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig 18: PageRank, 100 iterations, short stages (the scheduling-overhead
+sensitive regime). Skewed-hash (Algorithm 1) HeMT buckets vs even hash vs
+HomT microtasks. Real JAX rank math."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import BenchRow, timed
+from repro.core.simulator import SimNode
+from repro.workloads.pagerank import PageRankJob, pagerank_reference, random_graph
+
+ITERS = 100
+N = 4000
+
+
+def _nodes():
+    return [SimNode.constant("a", 1.0, overhead=0.15),
+            SimNode.constant("b", 0.4, overhead=0.15)]
+
+
+def rows() -> List[BenchRow]:
+    src, dst = random_graph(N, 5, seed=0)
+    ref = pagerank_reference(src, dst, N, iters=ITERS)
+
+    out = []
+    times = {}
+    for mode, kw in (("hemt", {"weights": [1.0, 0.4]}),
+                     ("even", {}),
+                     ("homt16", {"n_tasks": 16}),
+                     ("homt64", {"n_tasks": 64})):
+        m = mode.rstrip("0123456789")
+        job = PageRankJob(src, dst, N, _nodes(), mode=m, **kw)
+        ranks, us = timed(job.run, ITERS, repeat=1)
+        err = float(np.max(np.abs(ranks - ref)))
+        times[mode] = job.total_time()
+        out.append(BenchRow(f"fig18/{mode}", us,
+                            f"finish_s={job.total_time():.1f};"
+                            f"rank_err={err:.1e}"))
+    gain = (times["even"] - times["hemt"]) / times["even"] * 100
+    best_homt = min(times["homt16"], times["homt64"])
+    gain_homt = (best_homt - times["hemt"]) / best_homt * 100
+    out.append(BenchRow("fig18/summary", 0.0,
+                        f"hemt_vs_even_pct={gain:.1f};"
+                        f"hemt_vs_best_homt_pct={gain_homt:.1f}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

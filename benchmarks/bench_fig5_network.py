@@ -1,0 +1,35 @@
+"""Fig 5: stage completion time vs partition count when datanode uplink
+bandwidth is the universal bottleneck (n=4 datanodes, r=2, 64 Mbps).
+
+Paper observation: completion time INCREASES with the number of tasks —
+finer partitions co-read the same block and collide on one uplink
+(Claim 2: p1 = 1/r >= p2)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchRow, timed
+from repro.core.simulator import SimNode, homt_job
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    nodes = [SimNode.constant(f"w{i}", 1.0, overhead=0.1) for i in range(2)]
+    # 2 GB over a 64 Mbit/s == 8 MB/s uplink; tiny CPU work (network-bound)
+    for n_tasks in [2, 4, 8, 16, 32, 64]:
+        res, us = timed(homt_job, nodes, total_work=4.0, n_tasks=n_tasks,
+                        io_mb_total=2048.0, uplink_bw=8.0, n_datanodes=4,
+                        replica=2, repeat=1)
+        out.append(BenchRow(
+            f"fig5/tasks{n_tasks}", us,
+            f"stage_s={res.completion:.1f};idle_s={res.idle_time:.1f}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Shared benchmark plumbing: every module exposes rows() -> [BenchRow]."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List
+
+
+@dataclass
+class BenchRow:
+    name: str
+    us_per_call: float          # wall time of the measured operation
+    derived: str                # paper-comparable derived quantities
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    """Returns (result, us_per_call)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def print_rows(rows: List[BenchRow]) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())

@@ -1,0 +1,44 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig17      # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_claim1",
+    "benchmarks.bench_fig5_network",
+    "benchmarks.bench_fig7_adaptive",
+    "benchmarks.bench_fig8_provisioned",
+    "benchmarks.bench_fig13_burstable",
+    "benchmarks.bench_fig17_kmeans",
+    "benchmarks.bench_fig18_pagerank",
+    "benchmarks.bench_hemt_dp",
+    "benchmarks.bench_kernels",
+]
+
+
+def main() -> None:
+    flt = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if flt and flt not in modname:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["rows"])
+            for row in mod.rows():
+                print(row.csv(), flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{modname},ERROR,", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic writes, rotation, async, auto-resume."""
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    load_pytree, restore_checkpoint, save_checkpoint,
+)
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

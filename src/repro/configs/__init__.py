@@ -1,0 +1,52 @@
+"""Architecture registry: ``--arch <id>`` resolution for launcher & tests."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    ArchBundle, AttentionConfig, MeshConfig, ModelConfig, MoEConfig,
+    SSMConfig, ShapeConfig, TrainConfig, active_param_count, param_count,
+)
+from repro.configs.shapes import (  # noqa: F401
+    ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+    applicable_shapes, shape_skip_reason,
+)
+
+# arch id -> module name
+_ARCH_MODULES: Dict[str, str] = {
+    "dbrx-132b": "dbrx_132b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "gemma3-12b": "gemma3_12b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "granite-3-8b": "granite_3_8b",
+    "chatglm3-6b": "chatglm3_6b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-medium": "whisper_medium",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "pixtral-12b": "pixtral_12b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_bundle(arch: str) -> ArchBundle:
+    return _module(arch).BUNDLE
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+def all_bundles() -> Dict[str, ArchBundle]:
+    return {a: get_bundle(a) for a in ARCH_IDS}

@@ -1,0 +1,26 @@
+"""The paper's primary contribution: Heterogeneous MacroTasking (HeMT).
+
+Submodules:
+  estimators  — AR(1) executor speed estimation, fudge-factor probes (§5, §6.2)
+  capacity    — token-bucket burstable capacity model, W(t) solver (§6.2)
+  partitioner — HomT/HeMT integer partitioners (§4-§5)
+  skewed_hash — Algorithm 1 skewed hash partitioner (§7)
+  scheduler   — OA-HeMT / provisioned / burstable schedulers (§5-§6)
+  straggler   — Claim 1 bound, detection, speculation, elastic re-skew
+  hdfs_model  — Claim 2 storage-contention model (§3)
+  simulator   — discrete-event cluster simulator (the paper's testbed)
+  planner     — HeMT-DP grain planner used by the training runtime
+"""
+from repro.core.estimators import (  # noqa: F401
+    ARSpeedEstimator, FudgeFactorLearner, synchronization_delay,
+)
+from repro.core.capacity import (  # noqa: F401
+    BurstableNode, TokenBucket, burstable_split, solve_finish_time,
+)
+from repro.core.partitioner import (  # noqa: F401
+    even_split, hemt_split_floats, makespan, optimal_makespan,
+    proportional_split,
+)
+from repro.core.skewed_hash import bucket_of, bucket_of_jnp, integer_capacities  # noqa: F401
+from repro.core.planner import GrainPlanner, SlicePlan, WorkStealingQueue  # noqa: F401
+from repro.core.straggler import claim1_bound, detect_stragglers, verify_claim1  # noqa: F401

@@ -1,0 +1,173 @@
+"""Job-level schedulers: OA-HeMT adaptation loop, HomT baseline, provisioned
+and burstable HeMT — paper §5, §6.
+
+`AdaptiveHeMTScheduler` drives a sequence of same-class jobs (paper: fifty
+WordCount jobs through a submission queue; here also: a sequence of training
+steps): partition by current speed estimates -> run (simulated or real) ->
+feed observed (d_i, t_i) back into the AR(1) estimator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.capacity import BurstableNode, burstable_split
+from repro.core.estimators import ARSpeedEstimator, FudgeFactorLearner
+from repro.core.partitioner import (
+    even_split, hemt_split_floats, proportional_split,
+)
+from repro.core.simulator import (
+    SimNode, SimTask, StageResult, run_pull_stage, run_static_stage,
+)
+
+
+@dataclass
+class JobResult:
+    job_index: int
+    completion: float
+    idle_time: float
+    split: List[float]
+    speeds_used: List[float]
+
+
+class AdaptiveHeMTScheduler:
+    """Oblivious-Adaptive HeMT (paper §5).
+
+    First job: even split (the paper's k=1 rule). Afterwards d_i ~ v_i.
+    """
+
+    def __init__(self, executors: Sequence[str], alpha: float = 0.0,
+                 min_share: float = 0.0):
+        # NB: the paper's Fig 7 experiment uses *zero* forgetting factor.
+        self.executors = list(executors)
+        self.estimator = ARSpeedEstimator(alpha=alpha)
+        self.min_share = min_share
+        self.history: List[JobResult] = []
+
+    def plan(self, total_work: float) -> List[float]:
+        if not self.estimator.known():
+            n = len(self.executors)
+            return [total_work / n] * n
+        speeds = self.estimator.speeds(self.executors)
+        split = hemt_split_floats(total_work, speeds)
+        if self.min_share > 0:
+            floor = self.min_share * total_work
+            excess = sum(max(0.0, floor - s) for s in split)
+            split = [max(s, floor) for s in split]
+            scale = total_work / sum(split)
+            split = [s * scale for s in split]
+        return split
+
+    def record(self, job_index: int, split: Sequence[float],
+               elapsed: Sequence[float], result: Optional[StageResult] = None,
+               ) -> None:
+        for ex, d, t in zip(self.executors, split, elapsed):
+            if d > 0 and t > 0:
+                self.estimator.observe(ex, d, t)
+        speeds = self.estimator.speeds(self.executors)
+        comp = max(elapsed)
+        idle = comp - min(elapsed)
+        if result is not None:
+            comp, idle = result.completion, result.idle_time
+        self.history.append(JobResult(job_index, comp, idle, list(split), speeds))
+
+    # -- simulation driver ---------------------------------------------------
+    def run_simulated_sequence(self, node_factory: Callable[[int], List[SimNode]],
+                               n_jobs: int, total_work: float) -> List[JobResult]:
+        """Run n_jobs jobs; node_factory(k) returns the cluster as it exists
+        at job k (speed profiles relative to job start — lets benchmarks
+        inject interference at chosen job indices, paper Fig 7)."""
+        for k in range(n_jobs):
+            nodes = node_factory(k)
+            split = self.plan(total_work)
+            assignments = [[SimTask(w, task_id=i)] for i, w in enumerate(split)]
+            res = run_static_stage(nodes, assignments)
+            per_node_elapsed = [res.node_finish[nd.name] for nd in nodes]
+            self.record(k, split, per_node_elapsed, res)
+        return self.history
+
+
+class HomTScheduler:
+    """Homogeneous microtasking baseline with a configurable task count."""
+
+    def __init__(self, n_tasks: int):
+        self.n_tasks = n_tasks
+
+    def run_simulated(self, nodes: Sequence[SimNode], total_work: float,
+                      ) -> StageResult:
+        per = total_work / self.n_tasks
+        tasks = [SimTask(per, task_id=i) for i in range(self.n_tasks)]
+        return run_pull_stage(nodes, tasks)
+
+
+class ProvisionedHeMTScheduler:
+    """§6.1: split by known static resource shares (e.g. Mesos offers of
+    1.0 and 0.4 CPUs), optionally corrected by a learned fudge factor."""
+
+    def __init__(self, shares: Sequence[float],
+                 fudge: Optional[FudgeFactorLearner] = None,
+                 fudge_index: int = -1):
+        self.shares = list(shares)
+        self.fudge = fudge
+        self.fudge_index = fudge_index  # which executor the fudge applies to
+
+    def effective_shares(self) -> List[float]:
+        s = list(self.shares)
+        if self.fudge is not None and 0 <= self.fudge_index < len(s):
+            fastest = max(s)
+            s[self.fudge_index] = fastest * self.fudge.effective
+        return s
+
+    def plan(self, total_work: float) -> List[float]:
+        return hemt_split_floats(total_work, self.effective_shares())
+
+    def run_simulated(self, nodes: Sequence[SimNode], total_work: float,
+                      ) -> StageResult:
+        split = self.plan(total_work)
+        assignments = [[SimTask(w, task_id=i)] for i, w in enumerate(split)]
+        return run_static_stage(nodes, assignments)
+
+
+class BurstableHeMTScheduler:
+    """§6.2: split by superposed token-bucket workload curves W_i(t')."""
+
+    def __init__(self, nodes: Sequence[BurstableNode]):
+        self.bnodes = list(nodes)
+
+    def plan(self, total_work: float) -> Tuple[List[float], float]:
+        return burstable_split(self.bnodes, total_work)
+
+    def run_simulated(self, total_work: float, overhead: float = 0.0,
+                      ) -> StageResult:
+        split, _ = self.plan(total_work)
+        nodes = [SimNode.burstable(f"b{i}", bn, overhead)
+                 for i, bn in enumerate(self.bnodes)]
+        assignments = [[SimTask(w, task_id=i)] for i, w in enumerate(split)]
+        return run_static_stage(nodes, assignments)
+
+
+# -- multi-stage jobs (paper §7) ---------------------------------------------
+
+@dataclass
+class MultiStageJob:
+    """stages: list of per-stage total work; between stages data is shuffled
+    by either an even or a capacity-skewed partitioner (Algorithm 1)."""
+    stage_works: List[float]
+
+    def run(self, nodes: Sequence[SimNode], weights: Optional[Sequence[float]],
+            n_tasks_per_stage: Optional[int] = None) -> Tuple[float, List[StageResult]]:
+        """weights=None -> HomT with n_tasks_per_stage; else HeMT skewed."""
+        t, results = 0.0, []
+        for w in self.stage_works:
+            if weights is None:
+                per = w / n_tasks_per_stage
+                tasks = [SimTask(per, task_id=i) for i in range(n_tasks_per_stage)]
+                res = run_pull_stage(nodes, tasks, start_time=t)
+            else:
+                s = sum(weights)
+                assignments = [[SimTask(w * wi / s, task_id=i)]
+                               for i, wi in enumerate(weights)]
+                res = run_static_stage(nodes, assignments, start_time=t)
+            results.append(res)
+            t = res.completion  # program barrier between stages
+        return t, results

@@ -1,0 +1,315 @@
+"""Discrete-event cluster simulator — the paper's EC2/Mesos testbed in code.
+
+Models, per §5-§6 of the paper:
+  * nodes with piecewise-constant speed profiles (static container shares,
+    interference injections at arbitrary times, burstable token-bucket
+    two-segment profiles),
+  * per-task overhead (scheduling + launch + I/O setup) — the microtasking
+    cost the paper analyzes,
+  * pull-based task assignment (HomT; Claim 1's setting) and static
+    macrotask assignment (HeMT),
+  * a flow-level storage model: tasks read input from datanodes whose
+    uplinks are fairly shared by concurrent readers (Claim 2 / Fig 5/15);
+    a task completes when both its I/O and CPU work are done.
+
+All times are seconds, work is in abstract units (1 unit = 1 second on a
+speed-1.0 node), I/O sizes in MB, bandwidths in MB/s.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.capacity import BurstableNode
+
+
+# --------------------------------------------------------------------------
+# node model
+# --------------------------------------------------------------------------
+
+@dataclass
+class SimNode:
+    """A computing node with a piecewise-constant speed profile.
+
+    profile: [(t_start, speed), ...] sorted by t_start, first at t=0.
+    """
+    name: str
+    profile: List[Tuple[float, float]] = field(default_factory=lambda: [(0.0, 1.0)])
+    task_overhead: float = 0.0          # seconds added per task
+
+    def __post_init__(self):
+        if not self.profile or self.profile[0][0] != 0.0:
+            raise ValueError("profile must start at t=0")
+        for (t0, _), (t1, _) in zip(self.profile, self.profile[1:]):
+            if t1 <= t0:
+                raise ValueError("profile times must increase")
+
+    @classmethod
+    def constant(cls, name: str, speed: float, overhead: float = 0.0) -> "SimNode":
+        return cls(name, [(0.0, speed)], overhead)
+
+    @classmethod
+    def burstable(cls, name: str, node: BurstableNode, overhead: float = 0.0,
+                  ) -> "SimNode":
+        """Two-segment profile: peak until credit depletion, then baseline."""
+        tb = node.burst_time
+        if math.isinf(tb):
+            return cls(name, [(0.0, node.peak)], overhead)
+        if tb <= 0.0:     # zero credits: at baseline from the start
+            return cls(name, [(0.0, node.baseline)], overhead)
+        return cls(name, [(0.0, node.peak), (tb, node.baseline)], overhead)
+
+    def speed_at(self, t: float) -> float:
+        s = self.profile[0][1]
+        for t0, sp in self.profile:
+            if t0 <= t:
+                s = sp
+            else:
+                break
+        return s
+
+    def work_between(self, t0: float, t1: float) -> float:
+        """Integrate speed over [t0, t1]."""
+        if t1 <= t0:
+            return 0.0
+        total, t = 0.0, t0
+        segs = self.profile + [(math.inf, 0.0)]
+        for (s0, sp), (s1, _) in zip(segs, segs[1:]):
+            lo, hi = max(t, s0), min(t1, s1)
+            if hi > lo:
+                total += sp * (hi - lo)
+        return total
+
+    def finish_time(self, work: float, t0: float) -> float:
+        """Earliest t with work_between(t0, t) >= work."""
+        if work <= 0:
+            return t0
+        t, rem = t0, work
+        segs = self.profile + [(math.inf, 0.0)]
+        for (s0, sp), (s1, _) in zip(segs, segs[1:]):
+            lo, hi = max(t0, s0), s1
+            if hi <= t0:
+                continue
+            span = hi - lo
+            if sp > 0 and rem <= sp * span:
+                return lo + rem / sp
+            rem -= sp * span
+            if math.isinf(hi):
+                break
+        if rem > 1e-12:
+            raise RuntimeError(f"node {self.name} can never finish work={work}")
+        return hi
+
+
+# --------------------------------------------------------------------------
+# tasks & storage
+# --------------------------------------------------------------------------
+
+@dataclass
+class SimTask:
+    """cpu_work: seconds-at-speed-1; io_mb: input bytes to fetch;
+    datanode: which storage node serves it (-1 = no I/O)."""
+    cpu_work: float
+    io_mb: float = 0.0
+    datanode: int = -1
+    task_id: int = -1
+
+
+@dataclass
+class TaskRecord:
+    task_id: int
+    node: str
+    start: float
+    end: float
+    cpu_work: float
+
+
+@dataclass
+class StageResult:
+    records: List[TaskRecord]
+    node_finish: Dict[str, float]
+    completion: float            # max end
+    idle_time: float             # Claim 1 quantity: max finish - min finish
+
+    @property
+    def makespan(self) -> float:
+        return self.completion
+
+
+# --------------------------------------------------------------------------
+# the event loop
+# --------------------------------------------------------------------------
+
+_EPS = 1e-9
+
+
+def _run_stage(nodes: Sequence[SimNode], queues: List[List[SimTask]],
+               pull: bool, uplink_bw: Optional[float] = None,
+               n_datanodes: int = 0, start_time: float = 0.0) -> StageResult:
+    """Core fluid/event simulation.
+
+    queues: if pull, queues[0] is the shared pending queue; otherwise
+    queues[i] is node i's private queue (HeMT macrotask list).
+
+    I/O model: active readers of datanode d share `uplink_bw` equally
+    (progressive filling, recomputed at every event). A task must finish
+    its I/O and its CPU work; both progress concurrently (pipelined
+    read-process, as in Spark).
+    """
+    n = len(nodes)
+    shared = queues[0] if pull else None
+    private = None if pull else [list(q) for q in queues]
+
+    # per-node running task state
+    @dataclass
+    class Running:
+        task: SimTask
+        io_left: float
+        cpu_done_at: float   # absolute time CPU work completes (fixed at start)
+        start: float
+
+    running: List[Optional[Running]] = [None] * n
+    node_finish = {nd.name: start_time for nd in nodes}
+    records: List[TaskRecord] = []
+    t = start_time
+
+    def io_rates() -> Dict[int, float]:
+        """Current per-reader rate for each datanode."""
+        readers: Dict[int, int] = {}
+        for r in running:
+            if r and r.io_left > _EPS and r.task.datanode >= 0:
+                readers[r.task.datanode] = readers.get(r.task.datanode, 0) + 1
+        return {d: (uplink_bw / c if uplink_bw else math.inf)
+                for d, c in readers.items()}
+
+    def next_task_for(i: int) -> Optional[SimTask]:
+        if pull:
+            return shared.pop(0) if shared else None
+        return private[i].pop(0) if private[i] else None
+
+    def start_task(i: int, task: SimTask, now: float):
+        nd = nodes[i]
+        launch = now + nd.task_overhead
+        cpu_end = nd.finish_time(task.cpu_work, launch)
+        running[i] = Running(task, task.io_mb, cpu_end, now)
+
+    # prime all nodes
+    for i in range(n):
+        tk = next_task_for(i)
+        if tk:
+            start_task(i, tk, t)
+
+    guard = 0
+    while any(running):
+        guard += 1
+        if guard > 10_000_000:
+            raise RuntimeError("simulator event-loop runaway")
+        rates = io_rates()
+        # next event: earliest of (cpu completion if io done / will be done,
+        # io completion) over running tasks
+        t_next, who = math.inf, -1
+        for i, r in enumerate(running):
+            if not r:
+                continue
+            if r.io_left > _EPS and r.task.datanode >= 0:
+                rate = rates.get(r.task.datanode, math.inf)
+                t_io = t + (r.io_left / rate if math.isfinite(rate) else 0.0)
+                cand = max(t_io, r.cpu_done_at)
+                # but an io completion *event* (another flow freeing up) can
+                # change rates: we only advance to the earliest *completion*;
+                # flows finishing earlier are themselves completions.
+                cand_evt = t_io if t_io < r.cpu_done_at else cand
+            else:
+                cand_evt = r.cpu_done_at
+            if cand_evt < t_next:
+                t_next, who = cand_evt, i
+        # advance io progress to t_next
+        for i, r in enumerate(running):
+            if r and r.io_left > _EPS and r.task.datanode >= 0:
+                rate = rates.get(r.task.datanode, math.inf)
+                if math.isfinite(rate):
+                    r.io_left = max(0.0, r.io_left - rate * (t_next - t))
+                else:
+                    r.io_left = 0.0
+        t = t_next
+        r = running[who]
+        if r.io_left <= _EPS and t + _EPS >= r.cpu_done_at:
+            # task complete
+            records.append(TaskRecord(r.task.task_id, nodes[who].name,
+                                      r.start, t, r.task.cpu_work))
+            node_finish[nodes[who].name] = t
+            running[who] = None
+            tk = next_task_for(who)
+            if tk:
+                start_task(who, tk, t)
+        # else: io finished but cpu still running (or vice versa): loop again;
+        # rates recompute naturally.
+
+    finishes = list(node_finish.values())
+    return StageResult(records, node_finish, max(finishes),
+                       max(finishes) - min(finishes))
+
+
+def run_pull_stage(nodes: Sequence[SimNode], tasks: Sequence[SimTask],
+                   uplink_bw: Optional[float] = None,
+                   start_time: float = 0.0) -> StageResult:
+    """HomT: shared queue, idle nodes pull (paper Claim 1 setting)."""
+    q = [list(tasks)]
+    return _run_stage(nodes, q, pull=True, uplink_bw=uplink_bw,
+                      start_time=start_time)
+
+
+def run_static_stage(nodes: Sequence[SimNode],
+                     assignments: Sequence[Sequence[SimTask]],
+                     uplink_bw: Optional[float] = None,
+                     start_time: float = 0.0) -> StageResult:
+    """HeMT: one (or more) pre-assigned macrotasks per node."""
+    if len(assignments) != len(nodes):
+        raise ValueError("need one task list per node")
+    return _run_stage(nodes, [list(a) for a in assignments], pull=False,
+                      uplink_bw=uplink_bw, start_time=start_time)
+
+
+# --------------------------------------------------------------------------
+# convenience: whole-job helpers used by benchmarks
+# --------------------------------------------------------------------------
+
+def homt_job(nodes: Sequence[SimNode], total_work: float, n_tasks: int,
+             io_mb_total: float = 0.0, uplink_bw: Optional[float] = None,
+             n_datanodes: int = 4, replica: int = 2, seed: int = 0,
+             ) -> StageResult:
+    """Evenly partition total_work into n_tasks and run pull-based."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    per_cpu = total_work / n_tasks
+    per_io = io_mb_total / n_tasks
+    tasks = []
+    # block -> datanode selection with replica-aware choice (Claim 2 model):
+    # consecutive tasks read consecutive ranges, tasks sharing a block pick
+    # uniformly among its replicas.
+    n_blocks = max(1, min(n_tasks, 64))
+    placement = [rng.choice(n_datanodes, size=min(replica, n_datanodes),
+                            replace=False) for _ in range(n_blocks)]
+    for i in range(n_tasks):
+        dn = int(rng.choice(placement[i * n_blocks // n_tasks])) \
+            if io_mb_total > 0 else -1
+        tasks.append(SimTask(per_cpu, per_io, dn, task_id=i))
+    return run_pull_stage(nodes, tasks, uplink_bw=uplink_bw)
+
+
+def hemt_job(nodes: Sequence[SimNode], total_work: float,
+             weights: Sequence[float], io_mb_total: float = 0.0,
+             uplink_bw: Optional[float] = None, n_datanodes: int = 4,
+             replica: int = 2, seed: int = 0) -> StageResult:
+    """One macrotask per node, sized by weights (paper §5.1)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    s = sum(weights)
+    assignments = []
+    for i, (nd, w) in enumerate(zip(nodes, weights)):
+        dn = int(rng.integers(0, n_datanodes)) if io_mb_total > 0 else -1
+        assignments.append([SimTask(total_work * w / s,
+                                    io_mb_total * w / s, dn, task_id=i)])
+    return run_static_stage(nodes, assignments, uplink_bw=uplink_bw)

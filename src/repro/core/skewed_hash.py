@@ -1,0 +1,72 @@
+"""Skewed hash partitioner — paper Algorithm 1 (§7).
+
+Assigns a record to a shuffle bucket by hashing into the capacity-weighted
+prefix-sum space: bucket b receives a share of hash space proportional to
+executor b's capacity. The paper expresses it as "the number of elements in
+the (prefix-summed) capacities array >= hash"; equivalently a searchsorted
+over the exclusive prefix sums.
+
+Two implementations:
+  * numpy / python — used by the scheduler & shuffle simulator,
+  * jnp — used inside jitted code (MoE overflow re-bucketing, data shuffle);
+    `repro.kernels.skewed_bucket` is the Pallas TPU version of the same map.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def integer_capacities(weights: Sequence[float], resolution: int = 1 << 16,
+                       ) -> np.ndarray:
+    """Scale float capacities to integers summing to `resolution` (largest
+    remainder), the hash-space size of Algorithm 1."""
+    w = np.asarray(weights, np.float64)
+    if (w < 0).any() or w.sum() <= 0:
+        raise ValueError("capacities must be non-negative with positive sum")
+    share = w / w.sum() * resolution
+    base = np.floor(share).astype(np.int64)
+    rem = resolution - int(base.sum())
+    order = np.argsort(-(share - np.floor(share)))
+    base[order[:rem]] += 1
+    return base
+
+
+def bucket_of(hash_codes: np.ndarray, capacities: np.ndarray) -> np.ndarray:
+    """Vectorized Algorithm 1. hash_codes: int array; capacities: ints.
+
+    h = hash mod sum(capacities); bucket = #(prefix_sums <= h) -- i.e. the
+    unique b with cum_{b} <= h < cum_{b+1} (cum exclusive prefix sums).
+    """
+    caps = np.asarray(capacities, np.int64)
+    total = int(caps.sum())
+    h = np.mod(np.asarray(hash_codes, np.int64), total)
+    cum = np.cumsum(caps)  # inclusive prefix sums
+    return np.searchsorted(cum, h, side="right").astype(np.int32)
+
+
+def bucket_of_jnp(hash_codes: jnp.ndarray, capacities: jnp.ndarray) -> jnp.ndarray:
+    """jnp twin of `bucket_of` for use inside jit."""
+    caps = capacities.astype(jnp.int64)
+    total = jnp.sum(caps)
+    h = jnp.mod(hash_codes.astype(jnp.int64), total)
+    cum = jnp.cumsum(caps)
+    return jnp.searchsorted(cum, h, side="right").astype(jnp.int32)
+
+
+def expected_shares(capacities: Sequence[int]) -> List[float]:
+    caps = np.asarray(capacities, np.float64)
+    return list(caps / caps.sum())
+
+
+def skewed_shuffle_counts(n_records: int, capacities: Sequence[int],
+                          seed: int = 0) -> np.ndarray:
+    """Simulate a shuffle of n_records uniformly-hashed records through
+    Algorithm 1; returns per-bucket record counts."""
+    rng = np.random.default_rng(seed)
+    hashes = rng.integers(0, np.iinfo(np.int64).max, size=n_records)
+    b = bucket_of(hashes, np.asarray(capacities))
+    return np.bincount(b, minlength=len(list(capacities)))

@@ -1,0 +1,91 @@
+"""Straggler analytics & mitigation.
+
+Claim 1 (paper §3): with pull-based assignment, even partitioning and
+constant node speeds, idle time <= max_i T_i (single-task duration on the
+slowest node). `claim1_bound` computes the bound; the simulator validates
+it (tests + bench_claim1).
+
+Runtime mitigation used by the training framework (runtime/ft.py):
+  * z-score detection on per-grain rates (the paper's "execution time
+    variation at program barriers" signal),
+  * speculative re-execution for pull-mode stages,
+  * HeMT re-skew (capacity loss absorbed by the next plan, no restart).
+"""
+from __future__ import annotations
+
+import math
+import statistics
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.simulator import SimNode, SimTask, StageResult, run_pull_stage
+
+
+def claim1_bound(total_work: float, n_tasks: int,
+                 speeds: Sequence[float]) -> float:
+    """Upper bound on resource idling time: single task duration on the
+    slowest node = (D/m) / min_i v_i."""
+    per_task = total_work / n_tasks
+    return per_task / min(speeds)
+
+
+def verify_claim1(total_work: float, n_tasks: int, speeds: Sequence[float],
+                  overhead: float = 0.0) -> Tuple[float, float, bool]:
+    """Simulate pull-based HomT; return (idle_time, bound, holds)."""
+    nodes = [SimNode.constant(f"n{i}", v, overhead)
+             for i, v in enumerate(speeds)]
+    per = total_work / n_tasks
+    tasks = [SimTask(per, task_id=i) for i in range(n_tasks)]
+    res = run_pull_stage(nodes, tasks)
+    # the bound is on pure compute idling; per-task overhead adds to both
+    bound = claim1_bound(total_work, n_tasks, speeds) + overhead
+    return res.idle_time, bound, res.idle_time <= bound + 1e-9
+
+
+@dataclass
+class StragglerReport:
+    index: int
+    rate: float
+    zscore: float
+
+
+def detect_stragglers(rates: Sequence[float], z_threshold: float = -1.5,
+                      ) -> List[StragglerReport]:
+    """Flag executors whose work rate z-score is below threshold."""
+    if len(rates) < 3:
+        return []
+    mu = statistics.fmean(rates)
+    sd = statistics.pstdev(rates)
+    if sd == 0:
+        return []
+    out = []
+    for i, r in enumerate(rates):
+        z = (r - mu) / sd
+        if z < z_threshold:
+            out.append(StragglerReport(i, r, z))
+    return out
+
+
+def speculative_copies(records_end: Dict[int, Optional[float]], now: float,
+                       running_starts: Dict[int, float],
+                       timeout_factor: float = 2.0) -> List[int]:
+    """Opportunistic speculation (paper §8 survey, [45,6,5]): re-launch tasks
+    still running after timeout_factor x median completed duration."""
+    done = [e for e in records_end.values() if e is not None]
+    if not done:
+        return []
+    med = statistics.median(done)
+    return [tid for tid, st in running_starts.items()
+            if now - st > timeout_factor * med]
+
+
+def rebalance_after_loss(weights: Sequence[float], lost: Sequence[int],
+                         cold_start: str = "mean") -> List[float]:
+    """HeMT elastic response to node loss: drop lost executors, renormalize.
+    (Speeds of later replacement nodes get the cold-start rule — see
+    estimators.ARSpeedEstimator.speeds.)"""
+    kept = [w for i, w in enumerate(weights) if i not in set(lost)]
+    if not kept:
+        raise ValueError("all executors lost")
+    s = sum(kept)
+    return [w / s for w in kept]

@@ -1,0 +1,146 @@
+"""Blockwise (flash) attention Pallas TPU kernel.
+
+TPU adaptation notes (DESIGN.md §2): the GPU flash-attention tiling is
+re-thought for the TPU memory hierarchy — q/k/v tiles live in VMEM via
+BlockSpec, the (bq x bk) logits tile feeds the 128x128 MXU, online-softmax
+running stats (m, l) and the output accumulator sit in VMEM scratch that
+persists across the sequential kv-block grid dimension (TPU grids execute
+in order, unlike CUDA thread blocks). Block shapes default to MXU-aligned
+(128, 128).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — kv innermost/sequential.
+GQA: the k/v BlockSpec index_map folds the q-head onto its kv head
+(h -> h // group), so no head replication materializes in HBM.
+
+Causal + sliding-window masks are applied with block-level early-outs:
+fully-masked (q_blk, kv_blk) tiles are skipped entirely (the dominant win
+for long-context sliding-window archs like gemma3).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int,
+                 bq: int, bk: int, n_kv_blocks: int, sk_actual: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip: [q0, q0+bq) x [k0, k0+bk)
+    q0 = qi * bq
+    k0 = ki * bk
+    live = True
+    if causal:
+        live = q0 + bq - 1 >= k0               # any pair with q >= k
+    if window > 0:
+        live = jnp.logical_and(live, q0 < k0 + bk + window - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        s = q @ k.T                                      # (bq, bk)
+
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        rel = qpos - kpos
+        ok = kpos < sk_actual          # mask padded kv columns
+        if causal:
+            ok &= rel >= 0
+        if window > 0:
+            ok &= rel < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                              # (bq, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)       # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        # rows with no live kv block (can happen off the padded tail) -> 0
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
+
+    Sq/Sk are padded to block multiples internally; GQA via Hq = g * Hkv.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_q, _round_up(sq, 8))
+    bk = min(block_k, _round_up(sk, 8))
+    sq_p = _round_up(sq, bq)
+    sk_p = _round_up(sk, bk)
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    n_q_blocks = sq_p // bq
+    n_kv_blocks = sk_p // bk
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv_blocks=n_kv_blocks, sk_actual=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q_blocks, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,85 @@
+"""jit'd wrappers around the Pallas kernels, in model-native layouts.
+
+On CPU (this container) the kernels execute under ``interpret=True``; on a
+real TPU backend they compile to Mosaic. The wrappers do the layout
+transposes + padding and the cheap elementwise prep that XLA fuses with
+neighbouring ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import skewed_bucket as _sb
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Model layout: q (B, Sq, Hq, D); k/v (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              scale=scale, block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128,
+             init_state: Optional[jnp.ndarray] = None,
+             interpret: Optional[bool] = None,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 SSD scan, same contract as ``ref.ssd_scan_ref``.
+
+    x: (batch, S, H, P); dt: (batch, S, H) (already softplus'd);
+    a_log: (H,); B/C: (batch, S, G, N).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    bsz, s, h, p = x.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = dt.astype(jnp.float32) * a                   # (b, S, H)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dta = jnp.pad(dta, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, fin = _ssd.ssd_scan(xdt, dta, B, C, chunk=c, interpret=interpret)
+    y = y[:, :s]
+    if init_state is not None:
+        # fold a nonzero initial state in linearly (the scan is linear in
+        # the state): y += exp(cumsum dta) C . init ; final += prod-decay*init
+        cum = jnp.cumsum(dta[:, :s], axis=1)           # (b,S,H)
+        rep = h // B.shape[2]
+        Ch = jnp.repeat(C[:, :s], rep, axis=2).astype(jnp.float32)
+        y = y + jnp.exp(cum)[..., None] * jnp.einsum(
+            "bshn,bhpn->bshp", Ch, init_state.astype(jnp.float32))
+        fin = fin + init_state * jnp.exp(cum[:, -1])[..., None, None]
+    return y.astype(x.dtype), fin
+
+
+def skewed_bucket(hashes: jnp.ndarray, capacities: jnp.ndarray, *,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Algorithm 1 bucket map (paper §7). hashes (T,), capacities (E,)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _sb.skewed_bucket(hashes, capacities, interpret=interpret)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D). Returns (B, Hq, Sq, D).
+
+    GQA by head grouping; full-precision softmax.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    rel = qpos - kpos
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                 B: jnp.ndarray, C: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None,
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential (exact) SSD recurrence — the trusted oracle.
+
+    x: (batch, S, H, P); dt: (batch, S, H); a_log: (H,);
+    B, C: (batch, S, G, N) with G | H.
+    h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t h_t (+ no D skip).
+    Returns (y (batch,S,H,P), final_state (batch,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st = carry
+        xt, dtt, bt, ct = inp       # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dtt * a)    # (b,h)
+        st = st * decay[..., None, None] + \
+            jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        yt = jnp.einsum("bhpn,bhn->bhp", st, ct)
+        return st, yt
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def skewed_bucket_ref(hashes: jnp.ndarray, capacities: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1: bucket = #(inclusive-prefix-sums <= h), h = hash mod total."""
+    caps = capacities.astype(jnp.int32)
+    total = jnp.sum(caps)
+    h = jnp.mod(hashes.astype(jnp.int32), total)
+    cum = jnp.cumsum(caps)
+    return jnp.sum(cum[None, :] <= h[:, None], axis=-1).astype(jnp.int32)

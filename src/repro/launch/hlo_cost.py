@@ -1,0 +1,367 @@
+"""Post-partitioning HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` does NOT multiply while-loop bodies by
+their trip counts, so a scan-over-layers program under-reports FLOPs by
+~n_layers x. This parser walks the optimized HLO text, builds the call
+graph (while bodies x known_trip_count, fusions, to_apply), and computes:
+
+  * flops            — 2*M*N*K per dot (batch dims included), loop-adjusted
+  * bytes            — Σ (operand + output bytes) of top-level instructions
+                       per computation (a fusion = one kernel: its operands
+                       + outputs approximate its HBM traffic), loop-adjusted
+  * collectives      — per-op: kind, operand/output bytes, replica-group
+                       size, pod-crossing flag (from iota replica_groups),
+                       loop-adjusted totals
+
+This is a structural cost model of the *compiled per-device program* — the
+profile the §Roofline/§Perf methodology iterates on (no real-TPU clock in
+this container).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "custom-call", "copy-start",
+                   "copy-done", "while", "conditional", "call"}
+
+_SHAPE_RE = re.compile(r"(pred|s4|u4|s8|u8|s16|u16|f16|bf16|s32|u32|f32|"
+                       r"s64|u64|f64|c64|c128|token)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(")
+_NAME_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+")
+
+
+def _parse_instr(line: str) -> Optional["Instr"]:
+    """Hand parser: `%name = TYPE opcode(OPERANDS), attrs...` where TYPE may
+    be a tuple containing `/*index=N*/` comments (so no regex over it)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    # type: balanced-paren tuple or a single token
+    if i < n and line[i] == "(":
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i:j + 1]
+        i = j + 1
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        type_str = line[i:j]
+        i = j
+    while i < n and line[i] == " ":
+        i += 1
+    j = i
+    while j < n and (line[j].isalnum() or line[j] in "-_"):
+        j += 1
+    op = line[i:j]
+    if j >= n or line[j] != "(":
+        return None
+    return Instr(name, type_str, op, line[j + 1:])
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str          # everything after the opening paren of operands
+
+    def operands(self) -> List[str]:
+        depth, out, cur = 0, [], []
+        for ch in self.rest:
+            if ch == ")" and depth == 0:
+                break
+            if ch in "({[":
+                depth += 1
+            elif ch in ")}]":
+                depth -= 1
+            cur.append(ch)
+        src = "".join(cur)
+        return re.findall(r"%([\w\.\-]+)", src)
+
+    def attrs(self) -> str:
+        depth = 0
+        for i, ch in enumerate(self.rest):
+            if ch == ")" and depth == 0:
+                return self.rest[i + 1:]
+            if ch in "({[":
+                depth += 1
+            elif ch in ")}]":
+                depth -= 1
+        return ""
+
+
+@dataclass
+class CollectiveRecord:
+    kind: str
+    operand_bytes: int
+    output_bytes: int
+    group_size: int
+    pod_crossing: bool
+    count: float = 1.0      # loop-adjusted occurrence count
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: List[CollectiveRecord] = field(default_factory=list)
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return sum(c.operand_bytes * c.count for c in self.collectives)
+
+    @property
+    def dcn_operand_bytes(self) -> float:
+        return sum(c.operand_bytes * c.count for c in self.collectives
+                   if c.pod_crossing)
+
+    def summary(self) -> Dict[str, float]:
+        return {"flops": self.flops, "bytes": self.bytes_accessed,
+                "collective_bytes": self.collective_operand_bytes,
+                "dcn_bytes": self.dcn_operand_bytes,
+                "n_collectives": sum(c.count for c in self.collectives)}
+
+
+def _parse_computations(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and ("->" in line) and "{" in line:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            comps[cur].append(ins)
+    return comps
+
+
+def _iota_groups(attr: str) -> Optional[np.ndarray]:
+    """Parse `replica_groups=[G,S]<=[r0,r1,..](T(perm))?` into an (G,S) id
+    array; explicit `{{0,1},{2,3}}` also handled. None if absent."""
+    m = re.search(r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\]"
+                  r"(?:T\(([0-9,]+)\))?", attr)
+    if m:
+        out_dims = [int(x) for x in m.group(1).split(",")]
+        reshape = [int(x) for x in m.group(2).split(",")]
+        ids = np.arange(int(np.prod(reshape)))
+        if m.group(3):
+            perm = [int(x) for x in m.group(3).split(",")]
+            ids = ids.reshape(reshape).transpose(perm).reshape(-1)
+        return ids.reshape(out_dims)
+    m = re.search(r"replica_groups=\{(\{[0-9, ]+\}(?:,\{[0-9, ]+\})*)\}", attr)
+    if m:
+        rows = re.findall(r"\{([0-9, ]+)\}", m.group(1))
+        groups = [[int(x) for x in r.replace(" ", "").split(",")] for r in rows]
+        width = max(len(g) for g in groups)
+        if all(len(g) == width for g in groups):
+            return np.asarray(groups)
+        return None
+    return None
+
+
+def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
+    ops = instr.operands()
+    if len(ops) < 2:
+        return 0.0
+    lhs_t, rhs_t = symtab.get(ops[0]), symtab.get(ops[1])
+    if lhs_t is None or rhs_t is None:
+        return 0.0
+    lhs, rhs = _shape_dims(lhs_t), _shape_dims(rhs_t)
+    attrs = instr.attrs()
+
+    def dims(key):
+        m = re.search(key + r"=\{([0-9,]*)\}", attrs)
+        if not m or not m.group(1):
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+    lc = dims("lhs_contracting_dims")
+    lb = dims("lhs_batch_dims")
+    rc = dims("rhs_contracting_dims")
+    rb = dims("rhs_batch_dims")
+    batch = math.prod(lhs[d] for d in lb) if lb else 1
+    contract = math.prod(lhs[d] for d in lc) if lc else 1
+    m_dim = math.prod(lhs[d] for d in range(len(lhs))
+                      if d not in lc and d not in lb)
+    n_dim = math.prod(rhs[d] for d in range(len(rhs))
+                      if d not in rc and d not in rb)
+    return 2.0 * batch * m_dim * n_dim * contract
+
+
+def parse_hlo(text: str, *, pod_size: Optional[int] = None) -> HloCost:
+    """pod_size: devices per pod (e.g. 256 for the (2,16,16) mesh); a
+    collective is pod-crossing if any replica group spans pods."""
+    comps = _parse_computations(text)
+    symtabs = {c: {i.name: i.type_str for i in instrs}
+               for c, instrs in comps.items()}
+
+    # references: comp -> list of (callee, multiplier, kind)
+    refs: Dict[str, List[Tuple[str, float, str]]] = defaultdict(list)
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            attrs = ins.attrs()
+            if ins.op == "while":
+                m = re.search(r'known_trip_count[":{]+n[":]+(\d+)', attrs)
+                trip = float(m.group(1)) if m else 1.0
+                for key in ("body", "condition"):
+                    mm = re.search(key + r"=%([\w\.\-]+)", attrs)
+                    if mm:
+                        refs[cname].append((mm.group(1), trip, "while"))
+            else:
+                for key in ("calls", "to_apply"):
+                    mm = re.search(key + r"=%([\w\.\-]+)", attrs)
+                    if mm:
+                        kind = "fusion" if ins.op == "fusion" else "call"
+                        refs[cname].append((mm.group(1), 1.0, kind))
+                mm = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+                if mm:
+                    for b in re.findall(r"%([\w\.\-]+)", mm.group(1)):
+                        refs[cname].append((b, 1.0, "branch"))
+
+    # in-place fusion classification: does the called computation update a
+    # slice of an aliased buffer (scan-carry stacking) or rewrite it fully?
+    _has_dus: Dict[str, bool] = {}
+    for cname, instrs in comps.items():
+        _has_dus[cname] = any(i.op == "dynamic-update-slice" for i in instrs)
+
+    # local costs per computation
+    local_flops: Dict[str, float] = {}
+    local_bytes: Dict[str, float] = {}
+    local_colls: Dict[str, List[CollectiveRecord]] = {}
+    for cname, instrs in comps.items():
+        fl, by = 0.0, 0.0
+        colls: List[CollectiveRecord] = []
+        st = symtabs[cname]
+        for ins in instrs:
+            if ins.op in ("dot", "convolution"):
+                fl += _dot_flops(ins, st)
+            base_op = ins.op.replace("-start", "")
+            if base_op in _COLLECTIVES:
+                obytes = sum(_type_bytes(st.get(o, "")) for o in ins.operands())
+                groups = _iota_groups(ins.attrs())
+                gsize = int(groups.shape[-1]) if groups is not None else 0
+                crossing = False
+                if pod_size and groups is not None:
+                    crossing = bool(np.any(groups // pod_size
+                                           != groups[..., :1] // pod_size))
+                colls.append(CollectiveRecord(
+                    base_op, obytes, _type_bytes(ins.type_str), gsize, crossing))
+            if ins.op not in _SKIP_BYTES_OPS and not ins.op.endswith("-done"):
+                out_b = _type_bytes(ins.type_str)
+                op_bytes = [_type_bytes(st.get(o, "")) for o in ins.operands()]
+                if ins.op == "dynamic-slice":
+                    # reads only the slice it produces, not the whole input
+                    by += 2 * out_b
+                elif ins.op == "dynamic-update-slice":
+                    # in-place: writes the update region only
+                    upd = op_bytes[1] if len(op_bytes) > 1 else out_b
+                    by += 2 * upd
+                elif ins.op == "fusion" and out_b in op_bytes:
+                    # XLA aliases an operand buffer for the output. Two
+                    # patterns: a DUS-root fusion touches only the update
+                    # region; an elementwise in-place fusion reads+writes
+                    # the full buffer once.
+                    rest = list(op_bytes)
+                    rest.remove(out_b)
+                    mm = re.search(r"calls=%([\w\.\-]+)", ins.attrs())
+                    if mm and _has_dus.get(mm.group(1), False):
+                        by += 2 * sum(rest)
+                    else:
+                        by += 2 * out_b + sum(rest)
+                else:
+                    by += out_b + sum(op_bytes)
+        local_flops[cname] = fl
+        local_bytes[cname] = by
+        local_colls[cname] = colls
+
+    # totals via memoized DFS (flops traverse fusions; bytes do not —
+    # a fusion is one kernel whose HBM traffic is its operands + output)
+    memo_f: Dict[str, float] = {}
+    memo_b: Dict[str, float] = {}
+    memo_c: Dict[str, List[CollectiveRecord]] = {}
+
+    def total(cname: str) -> Tuple[float, float, List[CollectiveRecord]]:
+        if cname in memo_f:
+            return memo_f[cname], memo_b[cname], memo_c[cname]
+        memo_f[cname] = 0.0  # cycle guard
+        memo_b[cname] = 0.0
+        memo_c[cname] = []
+        fl = local_flops.get(cname, 0.0)
+        by = local_bytes.get(cname, 0.0)
+        cl = [CollectiveRecord(c.kind, c.operand_bytes, c.output_bytes,
+                               c.group_size, c.pod_crossing, c.count)
+              for c in local_colls.get(cname, [])]
+        for callee, mult, kind in refs.get(cname, []):
+            cf, cb, cc = total(callee)
+            fl += mult * cf
+            if kind != "fusion":
+                by += mult * cb
+            for c in cc:
+                cl.append(CollectiveRecord(c.kind, c.operand_bytes,
+                                           c.output_bytes, c.group_size,
+                                           c.pod_crossing, c.count * mult))
+        memo_f[cname], memo_b[cname], memo_c[cname] = fl, by, cl
+        return fl, by, cl
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line[len("ENTRY"):].strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: computation with most instructions
+        entry = max(comps, key=lambda c: len(comps[c]))
+    fl, by, cl = total(entry)
+    return HloCost(flops=fl, bytes_accessed=by, collectives=cl)

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS, not module-level constants, so importing this module
+never touches jax device state (the dry-run must set
+--xla_force_host_platform_device_count *before* first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods =
+    512 chips as (pod=2, data=16, model=16) — the `pod` axis is pure data
+    parallelism over DCN (HeMT-DP skews grain counts along it)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names — lets smoke tests run
+    the exact same sharded code paths on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,110 @@
+"""Render the dry-run/roofline markdown tables from artifacts/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report artifacts/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.configs import ARCH_IDS
+from repro.configs.shapes import ALL_SHAPES
+
+
+def load(dirname: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_gb(b: float) -> str:
+    return f"{b / 1e9:.2f}"
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | status | compile s | args GB/dev | temp GB/dev |"
+        " HLO GFLOPs/dev | HLO GB/dev | coll GB/dev (DCN) | #colls |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {a: i for i, a in enumerate(ARCH_IDS)}
+    sorder = {s.name: i for i, s in enumerate(ALL_SHAPES)}
+    for r in sorted([r for r in recs if r["mesh"] == mesh and not r.get("tag")],
+                    key=lambda r: (order[r["arch"]], sorder[r["shape"]])):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | skipped | — | — | — "
+                         f"| — | — | — | — |")
+            continue
+        if r["status"] == "error":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — "
+                         f"| — | — | — | — |")
+            continue
+        ma, hc = r["memory_analysis"], r["hlo_cost"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.0f} "
+            f"| {_fmt_gb(ma.get('argument_size_in_bytes', 0))} "
+            f"| {_fmt_gb(ma.get('temp_size_in_bytes', 0))} "
+            f"| {hc['flops'] / 1e9:,.0f} | {_fmt_gb(hc['bytes'])} "
+            f"| {_fmt_gb(hc['collective_bytes'])} "
+            f"({_fmt_gb(hc['dcn_bytes'])}) | {hc['n_collectives']:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s (DCN s) |"
+        " bottleneck | useful ratio | next move |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    order = {a: i for i, a in enumerate(ARCH_IDS)}
+    sorder = {s.name: i for i, s in enumerate(ALL_SHAPES)}
+    for r in sorted([r for r in recs if r["mesh"] == mesh and not r.get("tag")],
+                    key=lambda r: (order[r["arch"]], sorder[r["shape"]])):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped(full-attn) | — | — |")
+            continue
+        if r["status"] == "error":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR "
+                         f"| — | — |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3f} "
+            f"| {ro['memory_s']:.3f} | {ro['collective_s']:.3f} "
+            f"({ro['dcn_s']:.3f}) | {ro['bottleneck']} "
+            f"| {min(ro['useful_ratio'], 99.0):.2f} | {r['hint'][:72]} |")
+    return "\n".join(lines)
+
+
+def summary(recs: List[Dict]) -> str:
+    base = [r for r in recs if not r.get("tag")]
+    n_ok = sum(r["status"] == "ok" for r in base)
+    n_skip = sum(r["status"] == "skipped" for r in base)
+    n_err = sum(r["status"] == "error" for r in base)
+    return (f"{len(base)} cells: {n_ok} ok, {n_skip} skipped "
+            f"(documented long_500k full-attention skips), {n_err} errors")
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    recs = load(d)
+    print("## Summary\n")
+    print(summary(recs) + "\n")
+    for mesh in ("single", "multi"):
+        print(f"\n## Dry-run — {mesh} "
+              f"({'2x16x16=512' if mesh == 'multi' else '16x16=256'} chips)\n")
+        print(dryrun_table(recs, mesh))
+    print("\n## Roofline — single pod (16x16)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Roofline — multi-pod (2x16x16)\n")
+    print(roofline_table(recs, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Roofline terms from dry-run artifacts (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / peak_FLOPs            [per-device program]
+    memory term     = HLO_bytes / HBM_bw
+    collective term = ICI collective bytes / ICI_bw  +  DCN bytes / DCN_bw
+
+HLO_* come from `hlo_cost.parse_hlo` over the *compiled, partitioned*
+per-device program (loop trip counts folded in — XLA's cost_analysis does
+not do this), so terms are per-device seconds for one step. The brief's
+"/(chips × bw)" normalization is equivalent: our parser already reads the
+per-chip program, i.e. global_bytes/chips.
+
+Hardware constants (v5e): 197 TFLOP/s bf16; 819 GB/s HBM; ICI ~50 GB/s per
+link x 2 usable links for ring collectives = 100 GB/s effective per chip;
+DCN 25 GB/s per host / 4 chips = 6.25 GB/s per chip (multi-pod axis only).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, active_param_count, param_count,
+)
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 100e9               # 2 x 50 GB/s links usable per ring direction
+DCN_BW = 6.25e9              # per-chip share of 25 GB/s host DCN
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dcn_s: float
+    model_flops_per_dev: float
+    hlo_flops: float
+    bottleneck: str
+    useful_ratio: float      # MODEL_FLOPS / HLO_FLOPs
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dcn_s": self.dcn_s,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_dev": self.model_flops_per_dev,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic MODEL_FLOPS for the whole cell (all chips).
+
+    train:   6 * N_active * tokens      (fwd + bwd)
+    prefill: 2 * N_active * tokens      (fwd only)
+    decode:  2 * N_active * batch       (one new token per sequence)
+    """
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+def compute_roofline(cfg: ModelConfig, shape: ShapeConfig, *, n_chips: int,
+                     hlo_flops: float, hlo_bytes: float,
+                     ici_bytes: float, dcn_bytes: float) -> Roofline:
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    ici_s = ici_bytes / ICI_BW
+    dcn_s = dcn_bytes / DCN_BW
+    collective_s = ici_s + dcn_s
+    mf = model_flops(cfg, shape) / n_chips
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(compute_s, memory_s, collective_s, dcn_s, mf, hlo_flops,
+                    bottleneck, mf / hlo_flops if hlo_flops else math.inf)
+
+
+def improvement_hint(r: Roofline) -> str:
+    if r.bottleneck == "compute":
+        if r.useful_ratio < 0.6:
+            return ("compute-bound with low useful ratio: cut remat recompute "
+                    "or fuse the attention/router side computations")
+        return "compute-bound near useful peak: only kernel-level wins remain"
+    if r.bottleneck == "memory":
+        return ("memory-bound: shrink materialized intermediates (remat "
+                "policy, fp32->bf16 temps, sequence-parallel saved carries, "
+                "fused loss)")
+    return ("collective-bound: re-shard to shorten the all-reduce (FSDP "
+            "prefix on data axis), overlap grad all-reduce with backward, "
+            "or compress the DCN (pod-axis) reduction")

@@ -1,0 +1,86 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — what the dry-run lowers
+against. Train cells produce (TrainState abstract, batch specs); prefill
+cells produce (params abstract, prompt specs); decode cells produce
+(params abstract, decode-state abstract, token specs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchBundle, ModelConfig, ShapeConfig
+from repro.models.model import init_decode_state, init_params
+from repro.runtime.train_loop import train_state_init
+
+Pytree = Any
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for a full-sequence pass (train / prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "vision":
+        from repro.models.frontends import frontend_feature_dim
+        specs["input_embeds"] = _sds((b, s, frontend_feature_dim(cfg)), jnp.float32)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = _sds((b, s), jnp.int32)
+    if cfg.encoder_layers > 0:
+        from repro.models.frontends import frontend_feature_dim
+        specs["enc_feats"] = _sds((b, cfg.max_source_positions,
+                                   frontend_feature_dim(cfg)), jnp.float32)
+    return specs
+
+
+def params_abstract(cfg: ModelConfig) -> Pytree:
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def train_state_abstract(cfg: ModelConfig, bundle: ArchBundle) -> Pytree:
+    return jax.eval_shape(lambda k: train_state_init(k, cfg, bundle),
+                          jax.random.PRNGKey(0))
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV budget for a decode cell: the shape's seq_len capped at the arch's
+    architectural max (whisper's decoder caps at 448 target positions —
+    recorded in DESIGN.md §5)."""
+    return min(shape.seq_len, cfg.max_seq_len)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 ) -> Tuple[Pytree, jax.ShapeDtypeStruct, Optional[jax.ShapeDtypeStruct]]:
+    """(decode-state abstract, token spec, enc_out spec or None)."""
+    b = shape.global_batch
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, decode_cache_len(cfg, shape)))
+    tok = _sds((b,), jnp.int32)
+    enc = None
+    if cfg.encoder_layers > 0:
+        enc = _sds((b, cfg.max_source_positions, cfg.d_model), jnp.bfloat16)
+    return state, tok, enc
+
+
+def input_specs(cfg: ModelConfig, bundle: ArchBundle, shape: ShapeConfig,
+                ) -> Dict[str, Any]:
+    """Everything the dry-run needs for one cell, keyed by role."""
+    if shape.kind == "train":
+        return {"state": train_state_abstract(cfg, bundle),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params_abstract(cfg),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        state, tok, enc = decode_specs(cfg, shape)
+        return {"params": params_abstract(cfg), "dstate": state,
+                "token": tok, "enc_out": enc}
+    raise ValueError(shape.kind)

@@ -1,0 +1,4 @@
+"""Model zoo: composable pure-JAX definitions for all assigned architectures."""
+from repro.models.model import (  # noqa: F401
+    decode_step, forward, init_decode_state, init_params, loss_fn, params_axes,
+)

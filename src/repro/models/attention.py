@@ -1,0 +1,287 @@
+"""Attention: GQA, causal / sliding-window masks, cross-attention, KV cache.
+
+The XLA path (`dot_product_attention`) is the default for lowering/dry-run;
+`repro.kernels.ops.flash_attention` provides the Pallas TPU kernel for the
+same math (selected via ``impl='pallas'``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.layers import Params, _dense_init, apply_rope
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model: int, cfg: AttentionConfig,
+                   dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], d_model, cfg.n_heads * cfg.head_dim, dtype=dtype),
+        "wk": _dense_init(ks[1], d_model, cfg.n_kv_heads * cfg.head_dim, dtype=dtype),
+        "wv": _dense_init(ks[2], d_model, cfg.n_kv_heads * cfg.head_dim, dtype=dtype),
+        "wo": _dense_init(ks[3], cfg.n_heads * cfg.head_dim, d_model, dtype=dtype),
+    }
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: int) -> jnp.ndarray:
+    """(..., Sq, Sk) additive bias. window>0 limits lookback (sliding window)."""
+    rel = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def dot_product_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          bias: Optional[jnp.ndarray], scale: float) -> jnp.ndarray:
+    """q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh). GQA via head grouping."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if bias is not None:
+        logits = logits + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, dh)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, window: int, scale: float,
+                      block_q: int = 512, block_k: int = 1024) -> jnp.ndarray:
+    """Flash-equivalent streaming attention in pure XLA (lax.scan online
+    softmax) — the compile target for long sequences where the dense
+    (Sq x Sk) logits tensor must never materialize. Same math as
+    ``dot_product_attention`` with arange positions; the Pallas kernel
+    (`repro.kernels.flash_attention`) is the TPU-native twin.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D).
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    sq_p = -(-sq // bq) * bq
+    sk_p = -(-sk // bk) * bk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    nq, nk = sq_p // bq, sk_p // bk
+    # (nq, B, Hkv, g, bq, D) / (nk, B, Hkv, bk, D)
+    qb = q.reshape(b, nq, bq, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nk, bk, hkv, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, bk, hkv, d).transpose(1, 0, 3, 2, 4)
+
+    def q_block(args):
+        qi, qt = args                                     # qt (B,Hkv,g,bq,D)
+        q0 = qi * bq
+
+        def kv_step(carry, inp):
+            m_p, l_p, acc = carry
+            ki, kt, vt = inp                              # kt (B,Hkv,bk,D)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qt.astype(jnp.float32),
+                           kt.astype(jnp.float32)) * scale
+            qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            rel = qpos - kpos
+            ok = kpos < sk
+            if causal:
+                ok &= rel >= 0
+            if window > 0:
+                ok &= rel < window
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_c = jnp.max(s, axis=-1, keepdims=True)
+            m_n = jnp.maximum(m_p, m_c)
+            p = jnp.exp(s - m_n)
+            alpha = jnp.exp(m_p - m_n)
+            l_n = l_p * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                           vt.astype(jnp.float32))
+            return (m_n, l_n, acc), None
+
+        # flash-style backward: the (bq, bk) probability tile is REcomputed
+        # in the VJP instead of saved per step — without these checkpoints
+        # the scan/map VJPs stack all S^2 tiles (the whole point of flash
+        # attention is to never materialize that)
+        kv_step = jax.checkpoint(
+            kv_step, policy=jax.checkpoint_policies.nothing_saveable)
+        init = (jnp.full((b, hkv, g, bq, 1), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, bq, 1), jnp.float32),
+                jnp.zeros((b, hkv, g, bq, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init,
+                                      (jnp.arange(nk), kb, vb))
+        return acc / jnp.where(l == 0.0, 1.0, l)
+
+    q_block = jax.checkpoint(
+        q_block, policy=jax.checkpoint_policies.nothing_saveable)
+    out = jax.lax.map(q_block, (jnp.arange(nq), qb))      # (nq,B,Hkv,g,bq,D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq_p, hq, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+# sequences at or above this length stream through chunked_attention
+CHUNKED_THRESHOLD = 2048
+
+
+def attention_apply(params: Params, x: jnp.ndarray, cfg: AttentionConfig,
+                    positions: jnp.ndarray, *, window_override: Optional[int] = None,
+                    kv_source: Optional[jnp.ndarray] = None,
+                    impl: str = "xla") -> jnp.ndarray:
+    """Full-sequence attention (train / prefill).
+
+    kv_source: if given, keys/values come from it (cross-attention, no mask,
+    no rope on kv beyond source positions).
+    """
+    b, s, _ = x.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ params["wq"]).reshape(b, s, hq, dh)
+
+    cross = kv_source is not None
+    src = kv_source if cross else x
+    sk = src.shape[1]
+    k = (src @ params["wk"]).reshape(b, sk, hkv, dh)
+    v = (src @ params["wv"]).reshape(b, sk, hkv, dh)
+
+    if not cross:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_style)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_style)
+        window = cfg.sliding_window if window_override is None else window_override
+        bias = _mask_bias(positions, positions, cfg.causal, window)
+    else:
+        bias = None
+
+    scale = cfg.scale if cfg.scale is not None else 1.0 / math.sqrt(dh)
+    if impl == "pallas" and not cross:
+        from repro.kernels import ops as kops
+        window = cfg.sliding_window if window_override is None else window_override
+        out = kops.flash_attention(q, k, v, causal=cfg.causal, window=window,
+                                   scale=scale)
+    elif not cross and (impl == "chunked" or max(s, sk) >= CHUNKED_THRESHOLD):
+        window = cfg.sliding_window if window_override is None else window_override
+        out = chunked_attention(q, k, v, causal=cfg.causal, window=window,
+                                scale=scale)
+    else:
+        out = dot_product_attention(q, k, v, bias, scale)
+    return out.reshape(b, s, hq * dh) @ params["wo"]
+
+
+def attention_prefill(params: Params, x: jnp.ndarray, cfg: AttentionConfig,
+                      positions: jnp.ndarray, cache_len: int, *,
+                      window_override: Optional[int] = None, impl: str = "xla",
+                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence self-attention that also emits the decode KV cache.
+
+    Returns (out (B,S,D), cache {"k","v"} of (B, cache_len, Hkv, Dh)) laid
+    out ring-buffer style: slot i holds the largest position p < S with
+    p % cache_len == i (matches attention_decode_step's addressing).
+    """
+    b, s, _ = x.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ params["wq"]).reshape(b, s, hq, dh)
+    k = (x @ params["wk"]).reshape(b, s, hkv, dh)
+    v = (x @ params["wv"]).reshape(b, s, hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_style)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_style)
+
+    window = cfg.sliding_window if window_override is None else window_override
+    scale = cfg.scale if cfg.scale is not None else 1.0 / math.sqrt(dh)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=cfg.causal, window=window,
+                                   scale=scale)
+    elif impl == "chunked" or s >= CHUNKED_THRESHOLD:
+        out = chunked_attention(q, k, v, causal=cfg.causal, window=window,
+                                scale=scale)
+    else:
+        bias = _mask_bias(positions, positions, cfg.causal, window)
+        out = dot_product_attention(q, k, v, bias, scale)
+    out = out.reshape(b, s, hq * dh) @ params["wo"]
+
+    # ring-layout fill: slot i <- position p = s-1 - ((s-1-i) mod cap), p>=0
+    cap = cache_len
+    idx = jnp.arange(cap)
+    src = (s - 1) - jnp.mod((s - 1) - idx, cap)
+    valid = src >= 0
+    srcc = jnp.clip(src, 0, s - 1)
+    gk = jnp.where(valid[None, :, None, None], jnp.take(k, srcc, axis=1), 0)
+    gv = jnp.where(valid[None, :, None, None], jnp.take(v, srcc, axis=1), 0)
+    return out, {"k": gk.astype(x.dtype), "v": gv.astype(x.dtype)}
+
+
+# --------------------------------------------------------------------------
+# KV-cache decode
+# --------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttentionConfig,
+                  dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode_step(params: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                          cache_len: jnp.ndarray, cfg: AttentionConfig, *,
+                          window_override: Optional[int] = None,
+                          kv_source: Optional[jnp.ndarray] = None,
+                          ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode. x: (B, 1, D); cache_len: scalar int32 (current length).
+
+    The KV cache is a ring buffer of size cache['k'].shape[1]; for sliding
+    window layers the cache is allocated at window size so wrap-around
+    implements eviction for free.
+    """
+    b, one, _ = x.shape
+    assert one == 1
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    cap = cache["k"].shape[1]
+
+    q = (x @ params["wq"]).reshape(b, 1, hq, dh)
+    cross = kv_source is not None
+    if cross:
+        # cross-attention: static kv from encoder output, no cache update
+        sk = kv_source.shape[1]
+        k = (kv_source @ params["wk"]).reshape(b, sk, hkv, dh)
+        v = (kv_source @ params["wv"]).reshape(b, sk, hkv, dh)
+        scale = cfg.scale if cfg.scale is not None else 1.0 / math.sqrt(dh)
+        out = dot_product_attention(q, k, v, None, scale)
+        return out.reshape(b, 1, hq * dh) @ params["wo"], cache
+
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_style)
+    k_new = (x @ params["wk"]).reshape(b, 1, hkv, dh)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta, cfg.rope_style)
+    v_new = (x @ params["wv"]).reshape(b, 1, hkv, dh)
+
+    slot = jnp.mod(cache_len, cap)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+
+    # Ring buffer: absolute position stored at slot i is the largest p <= L
+    # with p % cap == i, i.e. abs(i) = L - ((L - i) mod cap); L = cache_len
+    # (the just-inserted token's position).
+    idx = jnp.arange(cap)
+    abs_pos = cache_len - jnp.mod(cache_len - idx, cap)
+    valid = abs_pos >= 0
+    window = cfg.sliding_window if window_override is None else window_override
+    if window > 0:
+        valid &= (cache_len - abs_pos) < window
+    bias = jnp.where(valid, 0.0, NEG_INF)[None, None, :]  # (1, 1, cap)
+
+    scale = cfg.scale if cfg.scale is not None else 1.0 / math.sqrt(dh)
+    out = dot_product_attention(q, k_cache, v_cache,
+                                jnp.broadcast_to(bias, (b, 1, cap)), scale)
+    out = out.reshape(b, 1, hq * dh) @ params["wo"]
+    return out, {"k": k_cache, "v": v_cache}

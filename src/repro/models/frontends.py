@@ -1,0 +1,38 @@
+"""Modality frontends.
+
+Per the brief, [audio]/[vlm] entries specify the transformer BACKBONE only;
+the frontend is a STUB — ``input_specs()`` provides precomputed frame/patch
+embeddings. These helpers define the stub embedding shapes and a linear
+adapter that maps frontend features into the backbone d_model.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _dense_init
+
+# Feature dims the (stubbed) frontends would emit.
+AUDIO_FEATURE_DIM = 128      # e.g. 128-bin log-mel frame stack after conv
+VISION_FEATURE_DIM = 1024    # pixtral-ViT patch embedding dim
+
+
+def frontend_feature_dim(cfg: ModelConfig) -> int:
+    return {"audio": AUDIO_FEATURE_DIM, "vision": VISION_FEATURE_DIM}[cfg.frontend]
+
+
+def adapter_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    return {"w": _dense_init(key, frontend_feature_dim(cfg), cfg.d_model, dtype=dtype)}
+
+
+def adapter_apply(params: Params, feats: jnp.ndarray) -> jnp.ndarray:
+    # frontend stubs may hand fp32 features; keep the backbone in param dtype
+    return feats.astype(params["w"].dtype) @ params["w"]
+
+
+def stub_feature_shape(cfg: ModelConfig, batch: int, seq: int) -> Tuple[int, ...]:
+    """Shape of the precomputed embeddings input_specs() hands the backbone."""
+    return (batch, seq, frontend_feature_dim(cfg))

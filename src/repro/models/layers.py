@@ -1,0 +1,139 @@
+"""Primitive layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-JAX, parameters are plain pytrees (nested dicts of jnp arrays).
+Initializers take an explicit PRNGKey; forward fns are pure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, style: str) -> jnp.ndarray:
+    """Inverse frequencies. style='half' (chatglm 2d-rope) rotates only the
+    first half of head dims, so it needs head_dim//4 frequencies."""
+    rot = head_dim if style == "full" else head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               style: str = "full") -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    if style == "none":
+        return x
+    head_dim = x.shape[-1]
+    inv = rope_frequencies(head_dim, theta, style)          # (rot/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]                      # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+
+    if style == "half":
+        rot_part, pass_part = jnp.split(x, 2, axis=-1)
+    else:
+        rot_part, pass_part = x, None
+
+    xf = rot_part.astype(jnp.float32)
+    x1, x2 = xf[..., 0::2], xf[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(rot_part.shape)
+    rotated = rotated.astype(x.dtype)
+    if pass_part is not None:
+        return jnp.concatenate([rotated, pass_part], axis=-1)
+    return rotated
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embedding table (n_pos, d)."""
+    half = d // 2
+    log_timescale = math.log(10_000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# --------------------------------------------------------------------------
+# dense / GLU MLP
+# --------------------------------------------------------------------------
+
+def _dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None,
+                dtype=jnp.bfloat16) -> jnp.ndarray:
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, glu: bool, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense_init(ks[0], d_model, d_ff, dtype=dtype),
+         "w_down": _dense_init(ks[1], d_ff, d_model, dtype=dtype)}
+    if glu:
+        p["w_gate"] = _dense_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    activation = jax.nn.silu if act == "silu" else jax.nn.gelu
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = activation(x @ params["w_gate"]) * up
+    else:
+        up = activation(up)
+    return up @ params["w_down"]
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    # stddev d^-0.5 keeps tied-unembedding logits O(1) at init
+    tbl = (jax.random.normal(key, (vocab, d), jnp.float32)
+           * (1.0 / math.sqrt(d))).astype(dtype)
+    return {"table": tbl}
+
+
+def embed(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["table"].T

@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW, LR schedules, DCN gradient compression."""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    CompressionState, compress_decompress, compression_init,
+)

@@ -1,0 +1,82 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Moments default to fp32; ``moment_dtype='bfloat16'`` gives the Gopher-style
+memory-lean variant used by the ≥100B configs (dbrx, jamba) so optimizer
+state fits the per-device HBM budget under FSDP (stochastic-rounding-free:
+the update math runs in fp32 and only storage is bf16).
+
+Pure functions over pytrees — no optax dependency.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # () int32
+    mu: Pytree             # first moment
+    nu: Pytree             # second moment
+
+
+def adamw_init(params: Pytree, moment_dtype: str = "float32") -> AdamWState:
+    dt = jnp.bfloat16 if moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float,
+                        ) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: Pytree, state: AdamWState, params: Pytree, *,
+                 lr: jnp.ndarray, beta1: float = 0.9, beta2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 grad_clip: float = 0.0,
+                 ) -> Tuple[Pytree, AdamWState, jnp.ndarray]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    if grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * beta1 + (1 - beta1) * gf
+        vf = v.astype(jnp.float32) * beta2 + (1 - beta2) * jnp.square(gf)
+        mhat = mf / b1c
+        vhat = vf / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2), standard LM recipe
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), gnorm

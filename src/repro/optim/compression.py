@@ -1,0 +1,90 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+The `pod` mesh axis rides data-center network (~16x less bandwidth than
+ICI), so the collective-roofline term there dominates multi-pod scaling.
+Two standard schemes, both with error feedback so compression error is
+re-injected next step (EF-SGD convergence guarantee):
+
+  * top-k sparsification (keep the k largest-|g| entries per leaf),
+  * int8 stochastic-free linear quantization (per-leaf scale).
+
+Applied *only* on the pod axis: the in-slice (ICI) reduction stays exact.
+Simulated compression (`compress_decompress`) runs inside jit — the wire
+format never materializes on CPU; on a real fleet the same functions
+bracket the `psum` over the "pod" axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class CompressionState(NamedTuple):
+    error: Pytree     # EF accumulator, same structure/dtype as grads (fp32)
+
+
+def compression_init(grads_like: Pytree) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _topk_leaf(g: jnp.ndarray, frac: float) -> jnp.ndarray:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    if k >= flat.shape[0]:
+        return g
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def _int8_leaf(g: jnp.ndarray) -> jnp.ndarray:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads: Pytree, state: CompressionState, *,
+                        scheme: str, topk_frac: float = 0.01,
+                        ) -> Tuple[Pytree, CompressionState]:
+    """EF compress->decompress round trip (what the DCN wire would carry).
+
+    Returns (decompressed grads to feed the pod-axis psum, new EF state).
+    scheme: "none" | "topk" | "int8".
+    """
+    if scheme == "none":
+        return grads, state
+
+    def per_leaf(g, e):
+        acc = g.astype(jnp.float32) + e
+        if scheme == "topk":
+            sent = _topk_leaf(acc, topk_frac)
+        elif scheme == "int8":
+            sent = _int8_leaf(acc)
+        else:
+            raise ValueError(f"unknown compression scheme {scheme!r}")
+        return sent.astype(g.dtype), acc - sent
+
+    pairs = jax.tree.map(per_leaf, grads, state.error)
+    sent = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return sent, CompressionState(err)
+
+
+def wire_bytes(grads: Pytree, scheme: str, topk_frac: float = 0.01) -> int:
+    """Bytes one pod-axis all-reduce would move per step (for the roofline
+    collective term; exact dense bf16 = 2 bytes/param)."""
+    n = sum(int(x.size) for x in jax.tree.leaves(grads))
+    if scheme == "none":
+        return 2 * n
+    if scheme == "int8":
+        return n + 4 * len(jax.tree.leaves(grads))
+    if scheme == "topk":
+        k = int(n * topk_frac)
+        return k * (4 + 4)  # value + index
+    raise ValueError(scheme)

@@ -1,0 +1,21 @@
+"""Learning-rate schedules (trace-safe: step may be a tracer)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step: jnp.ndarray, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, floor: float = 0.1) -> jnp.ndarray:
+    """Linear warmup to peak, cosine decay to floor*peak."""
+    s = step.astype(jnp.float32)
+    # (s+1)/W so the FIRST step trains (an optimizer step at lr exactly 0
+    # silently wastes the step and breaks single-step smoke tests)
+    warm = (s + 1.0) / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup_steps, warm, cos)
+
+
+def constant(step: jnp.ndarray, *, lr: float) -> jnp.ndarray:
+    return jnp.full((), lr, jnp.float32)

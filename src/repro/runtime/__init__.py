@@ -1,0 +1,9 @@
+"""Distributed runtime: sharding rules, train/serve loops, FT, elasticity."""
+from repro.runtime.sharding import (  # noqa: F401
+    axis_rules, batch_shardings, cache_shardings, param_shardings,
+    shardings_for, train_state_shardings,
+)
+from repro.runtime.train_loop import (  # noqa: F401
+    TrainState, make_grain_step, make_train_step, train_state_init,
+)
+from repro.runtime.serve_loop import HeMTBatcher, make_serve_step  # noqa: F401

@@ -1,0 +1,54 @@
+"""Elastic scaling: respond to slice loss/gain without restarting training.
+
+The HeMT insight makes elasticity cheap: capacity change is just another
+speed change, so the planner re-skews instead of redistributing state.
+Sequence of events on a resize (DESIGN.md §8):
+
+  1. FleetMonitor declares a slice dead (or the scheduler grants new ones).
+  2. `replan` updates the GrainPlanner slice set — survivors keep their
+     AR(1) estimates; newcomers cold-start at the survivor mean (§5.1 L_k^o).
+  3. Data assignment is index-based (repro.data.grains), so the next step's
+     grain ranges simply split differently — no data movement.
+  4. Model/optimizer state: under pure cross-slice DP each slice holds a
+     full replica, so nothing reshards; under FSDP the restore path re-lowers
+     against the new mesh from the latest checkpoint (`reshard_restore`).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.core.planner import GrainPlanner
+
+Pytree = Any
+
+
+def replan(planner: GrainPlanner, survivors: Sequence[str],
+           newcomers: Sequence[str] = ()) -> List[str]:
+    """Apply a fleet change to the planner; returns the new slice list."""
+    new_slices = list(survivors) + list(newcomers)
+    if not new_slices:
+        raise RuntimeError("no slices left after resize")
+    planner.resize(new_slices)
+    return new_slices
+
+
+def reshard_restore(ckpt_manager, state_like: Pytree,
+                    shardings: Optional[Pytree] = None) -> Pytree:
+    """Restore the latest checkpoint and (optionally) place it under new
+    shardings — the FSDP resize path. On a real fleet `jax.device_put` with
+    the new NamedShardings moves each shard over DCN exactly once."""
+    restored = ckpt_manager.restore_latest(state_like)
+    if restored is None:
+        raise FileNotFoundError("no checkpoint to resume from")
+    step, state, _meta = restored
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return step, state
+
+
+def scale_event_log(planner: GrainPlanner) -> List[Dict]:
+    """Per-step grain allocations (for EXPERIMENTS / tests)."""
+    return [{"mode": p.mode, "grains": dict(zip(p.slice_names, p.grains))}
+            for p in planner.step_log]

@@ -1,0 +1,91 @@
+"""Fault tolerance: heartbeats, straggler detection, failure response.
+
+The paper's §5 signal — execution-time variation at program barriers — is
+exactly what the trainer's StepReports carry. `FleetMonitor` consumes them:
+
+  * missed heartbeats  -> slice declared dead -> elastic replan
+    (survivor estimates kept, paper's cold-start rule for replacements)
+  * grain-rate z-score below threshold -> straggler -> *no restart*:
+    HeMT absorbs the capacity loss by re-skewing the next plan (the paper's
+    point); in HomT mode the work-stealing queue absorbs it per Claim 1.
+  * optional speculation for pull-mode stages (paper §8's [45, 6, 5]).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.straggler import StragglerReport, detect_stragglers
+
+
+@dataclass
+class Heartbeat:
+    slice_name: str
+    at: float                    # fleet-clock seconds
+    grains_done: int
+    elapsed: float               # busy seconds this step
+
+
+@dataclass
+class FleetEvent:
+    kind: str                    # "dead" | "straggler" | "recovered"
+    slice_name: str
+    at: float
+    detail: str = ""
+
+
+class FleetMonitor:
+    """Tracks liveness + throughput of every slice from step heartbeats."""
+
+    def __init__(self, slices: Sequence[str], *, timeout: float = 3.0,
+                 z_threshold: float = -1.5):
+        self.timeout = timeout
+        self.z_threshold = z_threshold
+        self.last_seen: Dict[str, float] = {s: 0.0 for s in slices}
+        self.rates: Dict[str, float] = {}
+        self.events: List[FleetEvent] = []
+        self._dead: set = set()
+
+    # ------------------------------------------------------------------
+    def heartbeat(self, hb: Heartbeat) -> None:
+        self.last_seen[hb.slice_name] = hb.at
+        if hb.elapsed > 0:
+            self.rates[hb.slice_name] = hb.grains_done / hb.elapsed
+        if hb.slice_name in self._dead:
+            self._dead.discard(hb.slice_name)
+            self.events.append(FleetEvent("recovered", hb.slice_name, hb.at))
+
+    def check(self, now: float) -> Tuple[List[str], List[StragglerReport]]:
+        """Returns (newly dead slices, current stragglers)."""
+        newly_dead = []
+        for name, seen in self.last_seen.items():
+            if name not in self._dead and now - seen > self.timeout:
+                self._dead.add(name)
+                newly_dead.append(name)
+                self.events.append(FleetEvent(
+                    "dead", name, now,
+                    f"no heartbeat for {now - seen:.1f}s (timeout {self.timeout}s)"))
+        alive = [n for n in self.last_seen if n not in self._dead]
+        rates = [self.rates.get(n, 0.0) for n in alive]
+        stragglers = detect_stragglers(rates, self.z_threshold)
+        reports = []
+        for s in stragglers:
+            name = alive[s.index]
+            reports.append(StragglerReport(s.index, s.rate, s.zscore))
+            self.events.append(FleetEvent(
+                "straggler", name, now,
+                f"rate {s.rate:.2f} grains/s, z={s.zscore:.2f}"))
+        return newly_dead, reports
+
+    def alive(self) -> List[str]:
+        return [n for n in self.last_seen if n not in self._dead]
+
+    def remove(self, name: str) -> None:
+        self.last_seen.pop(name, None)
+        self.rates.pop(name, None)
+        self._dead.discard(name)
+
+    def add(self, name: str, now: float) -> None:
+        self.last_seen[name] = now

@@ -1,0 +1,147 @@
+"""Train-step factory + HeMT grain accumulation.
+
+Two granularities:
+
+* ``make_train_step`` — one jit-able global step (whole global batch in one
+  program). This is what the multi-pod dry-run lowers: batch sharded over
+  ("pod","data"), params per the bundle's sharding rules, AdamW fused in.
+
+* ``make_grain_step`` / ``make_apply_step`` — HeMT-DP decomposition: a
+  grain step accumulates loss/grads over one fixed-shape microbatch; the
+  apply step consumes the (weighted) accumulated gradient at the barrier.
+  The accumulation trip count is a *host-side* loop so each slice can run
+  its own k_i (the paper's macrotask size) between barriers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchBundle, ModelConfig, TrainConfig
+from repro.models.model import init_params, loss_fn
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.compression import (
+    CompressionState, compress_decompress, compression_init,
+)
+from repro.optim.schedule import warmup_cosine
+
+Pytree = Any
+
+
+class TrainState(NamedTuple):
+    params: Pytree
+    opt: AdamWState
+    step: jnp.ndarray          # () int32
+    ef: Pytree                 # compression error-feedback (possibly empty {})
+
+
+def train_state_init(key, cfg: ModelConfig, bundle: ArchBundle) -> TrainState:
+    params = init_params(key, cfg)
+    moment_dtype = "bfloat16" if bundle.mesh.bf16_optimizer else "float32"
+    opt = adamw_init(params, moment_dtype)
+    ef: Pytree = {}
+    if bundle.train.compression != "none":
+        ef = compression_init(params).error
+    return TrainState(params, opt, jnp.zeros((), jnp.int32), ef)
+
+
+def _loss_with_aux(params, batch, cfg, impl, remat, constrain=None):
+    return loss_fn(params, batch, cfg, impl=impl, remat=remat,
+                   constrain=constrain)
+
+
+def make_train_step(cfg: ModelConfig, bundle: ArchBundle, *, impl: str = "xla",
+                    constrain=None,
+                    ) -> Callable[[TrainState, Dict[str, jnp.ndarray]],
+                                  Tuple[TrainState, Dict[str, jnp.ndarray]]]:
+    """constrain: optional residual-stream sharding hook (sequence-parallel
+    saved activations — see runtime.sharding.make_activation_constraint)."""
+    tc = bundle.train
+    remat = bundle.mesh.remat
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray],
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        loss, grads = jax.value_and_grad(_loss_with_aux)(
+            state.params, batch, cfg, impl, remat, constrain)
+        ef = state.ef
+        if tc.compression != "none":
+            sent, new_cs = compress_decompress(
+                grads, CompressionState(ef), scheme=tc.compression)
+            grads, ef = sent, new_cs.error
+        lr = warmup_cosine(state.step, peak_lr=tc.lr,
+                           warmup_steps=tc.warmup_steps,
+                           total_steps=tc.total_steps)
+        params, opt, gnorm = adamw_update(
+            grads, state.opt, state.params, lr=lr, beta1=tc.beta1,
+            beta2=tc.beta2, weight_decay=tc.weight_decay,
+            grad_clip=tc.grad_clip)
+        new_state = TrainState(params, opt, state.step + 1, ef)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# HeMT-DP grain decomposition
+# --------------------------------------------------------------------------
+
+class GrainAcc(NamedTuple):
+    grads: Pytree
+    loss_sum: jnp.ndarray
+    n: jnp.ndarray             # grains accumulated
+
+
+def grain_acc_init(params: Pytree) -> GrainAcc:
+    return GrainAcc(
+        grads=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        loss_sum=jnp.zeros(()), n=jnp.zeros((), jnp.int32))
+
+
+def make_grain_step(cfg: ModelConfig, bundle: ArchBundle, *, impl: str = "xla",
+                    jit: bool = True) -> Callable:
+    remat = bundle.mesh.remat
+
+    def grain_step(params: Pytree, acc: GrainAcc,
+                   grain: Dict[str, jnp.ndarray]) -> GrainAcc:
+        loss, grads = jax.value_and_grad(_loss_with_aux)(
+            params, grain, cfg, impl, remat)
+        return GrainAcc(
+            grads=jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc.grads, grads),
+            loss_sum=acc.loss_sum + loss, n=acc.n + 1)
+
+    return jax.jit(grain_step) if jit else grain_step
+
+
+def make_apply_step(cfg: ModelConfig, bundle: ArchBundle, *,
+                    jit: bool = True) -> Callable:
+    """Barrier step: mean the accumulated grads over the *global* grain
+    count (HeMT slices contribute different k_i; the denominator is the
+    total, so skewing never biases the gradient) and apply AdamW."""
+    tc = bundle.train
+
+    def apply_step(state: TrainState, acc: GrainAcc,
+                   total_grains: jnp.ndarray,
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        denom = jnp.maximum(total_grains.astype(jnp.float32), 1.0)
+        grads = jax.tree.map(lambda g: g / denom, acc.grads)
+        ef = state.ef
+        if tc.compression != "none":
+            sent, new_cs = compress_decompress(
+                grads, CompressionState(ef), scheme=tc.compression)
+            grads, ef = sent, new_cs.error
+        lr = warmup_cosine(state.step, peak_lr=tc.lr,
+                           warmup_steps=tc.warmup_steps,
+                           total_steps=tc.total_steps)
+        params, opt, gnorm = adamw_update(
+            grads, state.opt, state.params, lr=lr, beta1=tc.beta1,
+            beta2=tc.beta2, weight_decay=tc.weight_decay,
+            grad_clip=tc.grad_clip)
+        metrics = {"loss": acc.loss_sum / denom, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params, opt, state.step + 1, ef), metrics
+
+    return jax.jit(apply_step) if jit else apply_step

@@ -1,0 +1,3 @@
+"""The paper's multi-stage evaluation workloads (§7), implemented in JAX."""
+from repro.workloads.kmeans import KMeansJob, kmeans_reference  # noqa: F401
+from repro.workloads.pagerank import PageRankJob, pagerank_reference  # noqa: F401

@@ -1,0 +1,12 @@
+import os
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# 512-device flag in-process); keep any user XLA_FLAGS out of the way
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("ci")

@@ -1,0 +1,195 @@
+"""The paper's analytical objects: Claims 1-2, partitioners, estimators,
+token-bucket capacity — unit + hypothesis property tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.capacity import BurstableNode, burstable_split, solve_finish_time
+from repro.core.estimators import (
+    ARSpeedEstimator, FudgeFactorLearner, normalized, synchronization_delay,
+)
+from repro.core.hdfs_model import overlap_pmf, p_diff_block, p_same_block
+from repro.core.partitioner import (
+    even_split, hemt_split_floats, makespan, optimal_makespan,
+    proportional_split, split_error,
+)
+from repro.core.straggler import claim1_bound, verify_claim1
+
+speeds_st = st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6)
+
+
+# --------------------------------------------------------------------------
+# Claim 1
+# --------------------------------------------------------------------------
+
+@given(speeds=speeds_st,
+       n_tasks=st.integers(2, 60),
+       total=st.floats(10.0, 1000.0))
+def test_claim1_idle_bound_holds(speeds, n_tasks, total):
+    idle, bound, ok = verify_claim1(total, n_tasks, speeds)
+    assert ok, (idle, bound)
+
+
+@given(speeds=speeds_st)
+def test_claim1_bound_shrinks_with_task_count(speeds):
+    b_few = claim1_bound(100.0, 4, speeds)
+    b_many = claim1_bound(100.0, 64, speeds)
+    assert b_many < b_few
+
+
+def test_claim1_exact_example():
+    # 2 nodes at speeds 1.0/0.4; 20 equal tasks of 5s-at-speed-1 each
+    idle, bound, ok = verify_claim1(100.0, 20, [1.0, 0.4])
+    assert ok
+    assert bound == pytest.approx(5.0 / 0.4)
+
+
+# --------------------------------------------------------------------------
+# Claim 2 (storage contention model)
+# --------------------------------------------------------------------------
+
+@given(n=st.integers(1, 30), r=st.integers(1, 30))
+def test_claim2_p1_ge_p2(n, r):
+    if r > n:
+        return
+    p1, p2 = p_same_block(r), p_diff_block(n, r)
+    assert p1 >= p2 - 1e-12
+    if r == n:
+        assert p1 == pytest.approx(p2)
+
+
+@given(n=st.integers(2, 20), r=st.integers(1, 20))
+def test_overlap_pmf_sums_to_one(n, r):
+    if r > n:
+        return
+    total = sum(overlap_pmf(n, r, v) for v in range(0, r + 1))
+    assert total == pytest.approx(1.0)
+
+
+def test_paper_fig4_values():
+    # r=2: p1 = 0.5 for all n; p2 < p1 for n > 2
+    assert p_same_block(2) == 0.5
+    assert p_diff_block(4, 2) == pytest.approx(0.25)
+    assert p_diff_block(2, 2) == pytest.approx(0.5)
+
+
+# --------------------------------------------------------------------------
+# partitioners
+# --------------------------------------------------------------------------
+
+@given(total=st.integers(1, 10_000), n=st.integers(1, 32))
+def test_even_split_sums_and_balance(total, n):
+    s = even_split(total, n)
+    assert sum(s) == total
+    assert max(s) - min(s) <= 1
+
+
+@given(total=st.integers(0, 5_000), weights=speeds_st)
+def test_proportional_split_sums_and_error(total, weights):
+    s = proportional_split(total, weights)
+    assert sum(s) == total
+    assert all(x >= 0 for x in s)
+    # largest-remainder: within 1 unit of ideal per part
+    ideal = [w * total for w in normalized(weights)]
+    assert all(abs(si - ii) <= 1.0 + 1e-9 for si, ii in zip(s, ideal))
+
+
+@given(weights=speeds_st, total=st.integers(64, 512))
+def test_proportional_beats_even_makespan(weights, total):
+    """HeMT's whole point: the skewed split's makespan <= the even one's."""
+    s_h = proportional_split(total, weights)
+    s_e = even_split(total, len(weights))
+    assert makespan(s_h, weights) <= makespan(s_e, weights) + 1.0 / min(weights)
+
+
+@given(weights=speeds_st)
+def test_hemt_floats_achieve_optimal(weights):
+    split = hemt_split_floats(100.0, weights)
+    assert makespan(split, weights) == pytest.approx(
+        optimal_makespan(100.0, weights))
+
+
+def test_min_share_repair():
+    assert proportional_split(8, [1.0, 0.4], min_share=1) == [6, 2]
+    s = proportional_split(10, [100.0, 1.0, 1.0], min_share=1)
+    assert sum(s) == 10 and min(s) >= 1
+
+
+# --------------------------------------------------------------------------
+# estimators (§5.1)
+# --------------------------------------------------------------------------
+
+def test_ar1_update_rule():
+    est = ARSpeedEstimator(alpha=0.5)
+    est.observe("a", 10.0, 2.0)          # first obs: v = d/t = 5
+    assert est.speed("a") == pytest.approx(5.0)
+    est.observe("a", 10.0, 10.0)         # sample 1.0 -> 0.5*1 + 0.5*5 = 3
+    assert est.speed("a") == pytest.approx(3.0)
+
+
+def test_cold_start_rules():
+    for rule, expect in (("mean", 3.0), ("min", 2.0), ("max", 4.0)):
+        est = ARSpeedEstimator(alpha=0.0, cold_start=rule)
+        est.observe("a", 4.0, 1.0)
+        est.observe("b", 2.0, 1.0)
+        assert est.speeds(["a", "b", "new"])[2] == pytest.approx(expect)
+
+
+def test_cold_start_no_observations_defaults_to_one():
+    est = ARSpeedEstimator()
+    assert est.speeds(["x", "y"]) == [1.0, 1.0]
+
+
+def test_fudge_factor_learning():
+    # paper: advertised 0.4, probes reveal 0.32
+    f = FudgeFactorLearner(advertised=0.4, smoothing=1.0)
+    assert f.effective == 0.4
+    f.probe(fast_rate=1.0, slow_rate=0.32)
+    assert f.effective == pytest.approx(0.32)
+
+
+@given(finish=st.lists(st.floats(0, 100), min_size=1, max_size=8))
+def test_sync_delay_nonnegative(finish):
+    assert synchronization_delay(finish) >= 0
+
+
+# --------------------------------------------------------------------------
+# token-bucket capacity (§6.2)
+# --------------------------------------------------------------------------
+
+def test_paper_worked_example_w10():
+    # t2.small: 4 credits, rho=0.2 -> W(10) = 6
+    n = BurstableNode(credits=4, baseline=0.2)
+    assert n.burst_time == pytest.approx(5.0)
+    assert n.work_by(10.0) == pytest.approx(6.0)
+
+
+def test_paper_worked_example_three_nodes():
+    nodes = [BurstableNode(c, 0.2) for c in (4, 8, 12)]
+    shares, t = burstable_split(nodes, 20.0)
+    assert t == pytest.approx(80.0 / 11.0)
+    assert np.allclose(shares, [60 / 11, 80 / 11, 80 / 11])
+    # shares proportional to 3:4:4
+    assert shares[1] == pytest.approx(shares[2])
+    assert shares[0] / shares[1] == pytest.approx(3.0 / 4.0)
+
+
+@given(credits=st.lists(st.floats(0, 30), min_size=1, max_size=5),
+       rho=st.floats(0.05, 1.0), work=st.floats(0.1, 200.0))
+def test_burstable_split_consistent(credits, rho, work):
+    nodes = [BurstableNode(c, rho) for c in credits]
+    shares, t = burstable_split(nodes, work)
+    assert sum(shares) == pytest.approx(work, rel=1e-6)
+    # every node finishes its share at exactly t
+    for n, s in zip(nodes, shares):
+        assert n.time_for(s) == pytest.approx(t, rel=1e-6, abs=1e-9)
+
+
+@given(credits=st.floats(0, 20), rho=st.floats(0.05, 1.0),
+       t=st.floats(0, 50))
+def test_work_time_inverses(credits, rho, t):
+    n = BurstableNode(credits, rho)
+    w = n.work_by(t)
+    assert n.time_for(w) == pytest.approx(t, abs=1e-6) or w == 0

@@ -1,0 +1,280 @@
+"""Runtime: HeMT trainer modes, grain-accumulation exactness, planner,
+elasticity, fault tolerance, serve batching, compression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ArchBundle, TrainConfig, get_bundle, get_reduced
+from repro.core.planner import GrainPlanner, WorkStealingQueue
+from repro.data.grains import plan_grain_ranges
+from repro.data.pipeline import SyntheticCorpus
+from repro.optim.compression import (
+    CompressionState, compress_decompress, compression_init, wire_bytes,
+)
+from repro.runtime.elastic import replan, scale_event_log
+from repro.runtime.ft import FleetMonitor, Heartbeat
+from repro.runtime.hemt_driver import HeMTTrainer, SliceSpec
+from repro.runtime.serve_loop import HeMTBatcher, make_serve_step
+from repro.runtime.train_loop import (
+    grain_acc_init, make_apply_step, make_grain_step, make_train_step,
+    train_state_init,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny():
+    cfg = dataclasses.replace(get_reduced("granite-3-8b"), n_layers=2)
+    bundle = ArchBundle(model=cfg, train=TrainConfig(
+        lr=1e-3, warmup_steps=2, total_steps=50))
+    return cfg, bundle
+
+
+# --------------------------------------------------------------------------
+# grain accumulation == monolithic step
+# --------------------------------------------------------------------------
+
+def test_grain_accumulation_matches_full_batch():
+    cfg, bundle = _tiny()
+    corpus = SyntheticCorpus(cfg.vocab_size, 32, seed=1)
+    full = corpus.batch(range(8))
+    batch = {k: jnp.asarray(v) for k, v in full.items()}
+
+    state0 = train_state_init(KEY, cfg, bundle)
+    full_step = make_train_step(cfg, bundle)
+    s_full, m_full = jax.jit(full_step)(state0, batch)
+
+    grain_step = make_grain_step(cfg, bundle)
+    apply_step = make_apply_step(cfg, bundle)
+    acc = grain_acc_init(state0.params)
+    for lo in range(0, 8, 2):
+        grain = {k: v[lo:lo + 2] for k, v in batch.items()}
+        acc = grain_step(state0.params, acc, grain)
+    s_acc, m_acc = apply_step(state0, acc, jnp.asarray(4))
+
+    # same loss (mean of grain means == full-batch mean: equal grain sizes)
+    assert float(m_acc["loss"]) == pytest.approx(float(m_full["loss"]),
+                                                 rel=1e-5)
+    err = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        s_full.params, s_acc.params)
+    assert max(jax.tree.leaves(err)) < 5e-2  # bf16 params, fp32 math
+
+
+def test_training_descends():
+    cfg, bundle = _tiny()
+    slices = [SliceSpec("s0"), SliceSpec("s1")]
+    tr = HeMTTrainer(cfg, bundle, slices, grain_batch=2, global_batch=8,
+                     seq_len=32, mode="hemt")
+    st = train_state_init(KEY, cfg, bundle)
+    losses = []
+    for _ in range(12):
+        st, rep = tr.run_step(st)
+        losses.append(rep.loss)
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+# --------------------------------------------------------------------------
+# the paper's completion-time ordering, on real training
+# --------------------------------------------------------------------------
+
+def test_mode_ordering_under_heterogeneity():
+    cfg, bundle = _tiny()
+    slices = [SliceSpec("fast", [(0.0, 1.0)], 0.05),
+              SliceSpec("slow", [(0.0, 0.4)], 0.05)]
+    results = {}
+    for mode in ("hemt", "homt", "static-even"):
+        tr = HeMTTrainer(cfg, bundle, slices, grain_batch=2, global_batch=16,
+                         seq_len=16, mode=mode, grain_cost=1.0)
+        st = train_state_init(KEY, cfg, bundle)
+        st = tr.run(st, 6)
+        steady = tr.reports[2:]
+        results[mode] = float(np.mean([r.makespan for r in steady]))
+    # HeMT <= HomT <= static-even (paper's core claim)
+    assert results["hemt"] < results["homt"] < results["static-even"]
+
+
+def test_identical_math_across_modes():
+    cfg, bundle = _tiny()
+    slices = [SliceSpec("fast", [(0.0, 1.0)]), SliceSpec("slow", [(0.0, 0.4)])]
+    finals = {}
+    for mode in ("hemt", "homt", "static-even"):
+        tr = HeMTTrainer(cfg, bundle, slices, grain_batch=2, global_batch=8,
+                         seq_len=16, mode=mode)
+        st = train_state_init(KEY, cfg, bundle)
+        st = tr.run(st, 3)
+        finals[mode] = float(tr.reports[-1].loss)
+    assert finals["hemt"] == pytest.approx(finals["homt"], abs=1e-6)
+    assert finals["hemt"] == pytest.approx(finals["static-even"], abs=1e-6)
+
+
+def test_interference_triggers_reskew():
+    """Paper Fig 7 in the training loop: slice slows mid-run, plan adapts."""
+    cfg, bundle = _tiny()
+    slices = [SliceSpec("a", [(0.0, 1.0)], 0.02),
+              SliceSpec("b", [(0.0, 1.0), (30.0, 0.25)], 0.02)]
+    tr = HeMTTrainer(cfg, bundle, slices, grain_batch=2, global_batch=16,
+                     seq_len=16, mode="hemt", alpha=0.0, grain_cost=1.0)
+    st = train_state_init(KEY, cfg, bundle)
+    st = tr.run(st, 10)
+    early = tr.reports[2]
+    late = tr.reports[-1]
+    assert abs(early.grain_counts["a"] - early.grain_counts["b"]) <= 1
+    assert late.grain_counts["a"] >= 6   # ~1.0 : 0.25 -> 6/7 : 2/1
+
+
+# --------------------------------------------------------------------------
+# planner + elasticity + FT
+# --------------------------------------------------------------------------
+
+def test_planner_modes_and_resize():
+    p = GrainPlanner(["a", "b", "c"], alpha=0.0)
+    plan = p.plan(12)
+    assert plan.grains == [4, 4, 4]          # cold start = even
+    p.observe_step({"a": {"grains": 4, "elapsed": 1.0},
+                    "b": {"grains": 4, "elapsed": 2.0},
+                    "c": {"grains": 4, "elapsed": 4.0}})
+    plan = p.plan(14)
+    assert plan.grains[0] > plan.grains[1] > plan.grains[2] >= 1
+    # elastic: c dies; newcomer d cold-starts at survivor mean
+    new = replan(p, ["a", "b"], ["d"])
+    assert new == ["a", "b", "d"]
+    plan = p.plan(12)
+    assert sum(plan.grains) == 12
+    assert len(scale_event_log(p)) == 3
+
+
+def test_work_stealing_queue():
+    q = WorkStealingQueue()
+    q.seed(10)
+    got = q.pull(3)
+    assert got == [0, 1, 2] and len(q) == 7 and q.steals == 1
+
+
+def test_fleet_monitor_death_and_recovery():
+    m = FleetMonitor(["a", "b"], timeout=2.0)
+    m.heartbeat(Heartbeat("a", 1.0, 4, 1.0))
+    m.heartbeat(Heartbeat("b", 1.0, 4, 1.0))
+    dead, _ = m.check(1.5)
+    assert dead == []
+    dead, _ = m.check(3.5)                 # both last seen at 1.0
+    assert set(dead) == {"a", "b"}
+    m.heartbeat(Heartbeat("a", 4.0, 4, 1.0))
+    assert m.alive() == ["a"]
+    assert any(e.kind == "recovered" for e in m.events)
+
+
+def test_fleet_monitor_straggler_signal():
+    m = FleetMonitor(["a", "b", "c", "d"], timeout=100.0)
+    for name, rate in zip("abcd", [4.0, 4.2, 3.9, 0.5]):
+        m.heartbeat(Heartbeat(name, 1.0, int(rate * 10), 10.0))
+    _, stragglers = m.check(1.0)
+    assert len(stragglers) == 1
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def test_hemt_batcher_learns_replica_speeds():
+    b = HeMTBatcher(["r0", "r1"], alpha=0.0, min_share=1)
+    first = b.dispatch(10)
+    assert first == {"r0": 5, "r1": 5}
+    b.observe("r0", 100, 1.0)
+    b.observe("r1", 100, 2.5)              # 0.4x replica
+    second = b.dispatch(14)
+    assert second == {"r0": 10, "r1": 4}
+    assert b.predicted_sync_delay(second) < b.predicted_sync_delay(first)
+
+
+def test_serve_step_generates():
+    cfg, bundle = _tiny()
+    from repro.models.model import init_decode_state, init_params
+    params = init_params(KEY, cfg)
+    step = jax.jit(make_serve_step(cfg))
+    state = init_decode_state(cfg, 2, 8)
+    tok = jnp.ones((2,), jnp.int32)
+    toks = []
+    for _ in range(5):
+        tok, logits, state = step(params, state, tok)
+        toks.append(np.asarray(tok))
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        assert int(tok.min()) >= 0 and int(tok.max()) < cfg.vocab_size
+    assert int(state["length"]) == 5
+
+
+# --------------------------------------------------------------------------
+# gradient compression
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["topk", "int8"])
+def test_compression_error_feedback_converges(scheme):
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(128,)),
+                          jnp.float32)}
+    cs = compression_init(g)
+    total = jnp.zeros((128,))
+    n = 30
+    for _ in range(n):
+        sent, cs = compress_decompress(g, cs, scheme=scheme, topk_frac=0.05)
+        total = total + sent["w"]
+    # EF: cumulative sent + residual error == cumulative true gradient
+    resid = float(jnp.max(jnp.abs(total + cs.error["w"] - n * g["w"])))
+    assert resid < 1e-3
+
+
+def test_wire_bytes_ordering():
+    g = {"w": jnp.zeros((1000,), jnp.float32)}
+    assert wire_bytes(g, "topk", 0.01) < wire_bytes(g, "int8") \
+        < wire_bytes(g, "none")
+
+
+# --------------------------------------------------------------------------
+# grain planning / data determinism
+# --------------------------------------------------------------------------
+
+def test_grain_ranges_cover_step_batch():
+    ga = plan_grain_ranges(3, 32, 4, ["a", "b"], [5, 3])
+    idx = [i for grains in ga.per_slice.values()
+           for g in grains for i in g.indices()]
+    assert sorted(idx) == list(range(96, 128))
+
+
+def test_corpus_determinism_and_batch():
+    c = SyntheticCorpus(512, 16, seed=9)
+    assert (c.sample(5)["tokens"] == c.sample(5)["tokens"]).all()
+    b = c.batch([1, 2, 3])
+    assert b["tokens"].shape == (3, 16)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+
+
+@pytest.mark.parametrize("scheme", ["int8", "topk"])
+def test_training_descends_under_dcn_compression(scheme):
+    """EF-compressed gradients (the DCN all-reduce payload) still learn."""
+    import dataclasses as dc
+    cfg, bundle = _tiny()
+    bundle = bundle.replace(train=dc.replace(bundle.train,
+                                             compression=scheme))
+    from repro.data.pipeline import SyntheticCorpus
+    corpus = SyntheticCorpus(cfg.vocab_size, 24, seed=2)
+    step = jax.jit(make_train_step(cfg, bundle))
+    state = train_state_init(KEY, cfg, bundle)
+    losses = []
+    for s in range(10):
+        batch = {k: jnp.asarray(v)
+                 for k, v in corpus.batch(range(s * 8, s * 8 + 8)).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_speculative_copies():
+    from repro.core.straggler import speculative_copies
+    done = {0: 1.0, 1: 1.2, 2: None}
+    running = {2: 0.5}
+    # at t=1.5, task 2 has run 1.0 < 2x median(1.1) -> no speculation yet
+    assert speculative_copies(done, 1.5, running) == []
+    # at t=3.0 it exceeds the timeout factor -> relaunch
+    assert speculative_copies(done, 3.0, running) == [2]

@@ -1,0 +1,174 @@
+"""Discrete-event simulator + job-level schedulers (paper §5-§7)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.capacity import BurstableNode
+from repro.core.scheduler import (
+    AdaptiveHeMTScheduler, BurstableHeMTScheduler, HomTScheduler,
+    MultiStageJob, ProvisionedHeMTScheduler,
+)
+from repro.core.simulator import (
+    SimNode, SimTask, hemt_job, homt_job, run_pull_stage, run_static_stage,
+)
+from repro.core.skewed_hash import (
+    bucket_of, expected_shares, integer_capacities, skewed_shuffle_counts,
+)
+from repro.core.straggler import detect_stragglers, rebalance_after_loss
+
+
+# --------------------------------------------------------------------------
+# simulator mechanics
+# --------------------------------------------------------------------------
+
+def test_single_node_constant_speed():
+    n = SimNode.constant("a", 2.0)
+    res = run_pull_stage([n], [SimTask(10.0, task_id=0)])
+    assert res.completion == pytest.approx(5.0)
+
+
+def test_overhead_added_per_task():
+    n = SimNode.constant("a", 1.0, overhead=0.5)
+    res = run_pull_stage([n], [SimTask(1.0, task_id=i) for i in range(4)])
+    assert res.completion == pytest.approx(4 * 1.5)
+
+
+def test_profile_change_mid_task():
+    # speed 1.0 for 5s then 0.5: 10 units takes 5 + 10 = 15s
+    n = SimNode("a", [(0.0, 1.0), (5.0, 0.5)])
+    res = run_static_stage([n], [[SimTask(10.0, task_id=0)]])
+    assert res.completion == pytest.approx(15.0)
+
+
+def test_pull_faster_node_takes_more():
+    nodes = [SimNode.constant("fast", 1.0), SimNode.constant("slow", 0.25)]
+    tasks = [SimTask(1.0, task_id=i) for i in range(20)]
+    res = run_pull_stage(nodes, tasks)
+    counts = {"fast": 0, "slow": 0}
+    for r in res.records:
+        counts[r.node] += 1
+    assert counts["fast"] > 3 * counts["slow"]
+
+
+def test_static_stage_respects_assignment():
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    res = run_static_stage(nodes, [[SimTask(3.0, task_id=0)],
+                                   [SimTask(1.0, task_id=1)]])
+    assert res.node_finish["a"] == pytest.approx(3.0)
+    assert res.node_finish["b"] == pytest.approx(1.0)
+    assert res.idle_time == pytest.approx(2.0)
+
+
+def test_uplink_sharing_slows_coreaders():
+    # two readers on one datanode share bandwidth -> 2x io time
+    nodes = [SimNode.constant(f"n{i}", 1.0) for i in range(2)]
+    tasks = [SimTask(0.1, io_mb=100.0, datanode=0, task_id=i)
+             for i in range(2)]
+    res = run_pull_stage(nodes, tasks, uplink_bw=100.0)
+    assert res.completion == pytest.approx(2.0, rel=0.05)
+    tasks2 = [SimTask(0.1, io_mb=100.0, datanode=i, task_id=i)
+              for i in range(2)]
+    res2 = run_pull_stage(nodes, tasks2, uplink_bw=100.0)
+    assert res2.completion == pytest.approx(1.0, rel=0.05)
+
+
+# --------------------------------------------------------------------------
+# OA-HeMT (§5): Fig 7 / Fig 8 behaviours
+# --------------------------------------------------------------------------
+
+def test_oahemt_learns_static_shares_in_two_jobs():
+    """Paper Fig 8: 1.0/0.4 provisioning learned after ~2 trials."""
+    sched = AdaptiveHeMTScheduler(["a", "b"], alpha=0.0)
+    nodes = lambda k: [SimNode.constant("a", 1.0), SimNode.constant("b", 0.4)]
+    hist = sched.run_simulated_sequence(nodes, n_jobs=5, total_work=140.0)
+    # job 0 is the even split (paper's k=1 rule)
+    assert hist[0].split == pytest.approx([70.0, 70.0])
+    opt = 140.0 / 1.4
+    # by job 2 the completion time is within 2% of optimal
+    assert hist[2].completion == pytest.approx(opt, rel=0.02)
+    assert hist[4].idle_time < 1e-6
+
+
+def test_oahemt_adapts_to_interference():
+    """Paper Fig 7: interference injected mid-sequence; re-balances."""
+    def nodes(k):
+        # node b slows to 0.3 from job 10 onward (interfering process)
+        vb = 1.0 if k < 10 else 0.3
+        return [SimNode.constant("a", 1.0), SimNode.constant("b", vb)]
+    sched = AdaptiveHeMTScheduler(["a", "b"], alpha=0.0)
+    hist = sched.run_simulated_sequence(nodes, n_jobs=20, total_work=130.0)
+    # completion spikes at job 10 then recovers within 2 jobs
+    assert hist[10].completion > hist[9].completion * 1.3
+    assert hist[12].completion == pytest.approx(100.0, rel=0.03)
+
+
+def test_provisioned_with_fudge_matches_observed():
+    from repro.core.estimators import FudgeFactorLearner
+    fudge = FudgeFactorLearner(advertised=0.4, smoothing=1.0)
+    fudge.probe(1.0, 0.32)
+    sched = ProvisionedHeMTScheduler([1.0, 0.4], fudge=fudge, fudge_index=1)
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 0.32)]
+    res = sched.run_simulated(nodes, 132.0)
+    assert res.idle_time < 1e-6          # perfect balance with true ratio
+
+
+def test_burstable_scheduler_finishes_simultaneously():
+    bnodes = [BurstableNode(4, 0.2), BurstableNode(8, 0.2),
+              BurstableNode(12, 0.2)]
+    sched = BurstableHeMTScheduler(bnodes)
+    res = sched.run_simulated(20.0)
+    assert res.idle_time < 1e-6
+    assert res.completion == pytest.approx(80 / 11)
+
+
+def test_homt_beats_bad_static_even_under_heterogeneity():
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 0.4)]
+    homt = HomTScheduler(n_tasks=16).run_simulated(nodes, 140.0)
+    even = run_static_stage(nodes, [[SimTask(70.0, task_id=0)],
+                                    [SimTask(70.0, task_id=1)]])
+    assert homt.completion < even.completion
+
+
+# --------------------------------------------------------------------------
+# multi-stage (§7) + Algorithm 1
+# --------------------------------------------------------------------------
+
+@given(weights=st.lists(st.floats(0.1, 5.0), min_size=2, max_size=5),
+       n_records=st.integers(1000, 20_000))
+def test_algorithm1_shares_proportional(weights, n_records):
+    caps = integer_capacities(weights, resolution=1 << 14)
+    counts = skewed_shuffle_counts(n_records, caps, seed=1)
+    share = counts / counts.sum()
+    expect = np.asarray(expected_shares(caps))
+    assert np.all(np.abs(share - expect) < 0.05)
+
+
+def test_algorithm1_identity_hash_ranges():
+    caps = np.asarray([3, 1])
+    # hash mod 4: 0,1,2 -> bucket 0; 3 -> bucket 1
+    b = bucket_of(np.arange(8), caps)
+    assert list(b) == [0, 0, 0, 1, 0, 0, 0, 1]
+
+
+def test_multistage_hemt_beats_homt_with_overhead():
+    """Paper Fig 18 regime: short stages, per-task overhead."""
+    nodes = [SimNode.constant("a", 1.0, overhead=0.2),
+             SimNode.constant("b", 0.4, overhead=0.2)]
+    job = MultiStageJob(stage_works=[14.0] * 10)
+    t_hemt, _ = job.run(nodes, weights=[1.0, 0.4])
+    t_homt, _ = job.run(nodes, weights=None, n_tasks_per_stage=16)
+    assert t_hemt < t_homt
+
+
+# --------------------------------------------------------------------------
+# straggler utilities
+# --------------------------------------------------------------------------
+
+def test_detect_stragglers():
+    reports = detect_stragglers([1.0, 1.05, 0.95, 0.2], z_threshold=-1.5)
+    assert len(reports) == 1 and reports[0].index == 3
+
+
+def test_rebalance_after_loss():
+    w = rebalance_after_loss([0.5, 0.3, 0.2], lost=[1])
+    assert w == pytest.approx([0.5 / 0.7, 0.2 / 0.7])

@@ -1,0 +1,65 @@
+"""K-Means / PageRank (paper §7): partition-invariance of the math and the
+paper's completion-time ordering."""
+import numpy as np
+import pytest
+
+from repro.core.simulator import SimNode
+from repro.workloads.kmeans import KMeansJob, kmeans_reference
+from repro.workloads.pagerank import PageRankJob, pagerank_reference, random_graph
+
+
+def _nodes(overhead=0.05):
+    return [SimNode.constant("a", 1.0, overhead),
+            SimNode.constant("b", 0.4, overhead)]
+
+
+def test_kmeans_partitioning_invariance():
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(400, 4))
+    ref = kmeans_reference(pts, k=5, iters=8, seed=3)
+    job = KMeansJob(pts, 5, _nodes(), mode="hemt", weights=[1.0, 0.4], seed=3)
+    got = np.asarray(job.run(8))
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+
+
+def test_kmeans_hemt_faster_than_even():
+    rng = np.random.default_rng(1)
+    pts = rng.normal(size=(1400, 4))
+    times = {}
+    for mode, kw in (("hemt", {"weights": [1.0, 0.4]}),
+                     ("even", {}), ("homt", {"n_tasks": 16})):
+        job = KMeansJob(pts, 4, _nodes(), mode=mode, seed=1, **kw)
+        job.run(6)
+        times[mode] = job.total_time()
+    assert times["hemt"] < times["even"]
+    assert times["hemt"] < times["homt"]     # per-task overhead regime
+
+
+def test_pagerank_partitioning_invariance():
+    src, dst = random_graph(300, 5, seed=2)
+    ref = pagerank_reference(src, dst, 300, iters=10)
+    job = PageRankJob(src, dst, 300, _nodes(), mode="hemt",
+                      weights=[1.0, 0.4])
+    got = job.run(10)
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+    assert got.sum() == pytest.approx(1.0, abs=0.2)
+
+
+def test_pagerank_skewed_buckets_match_capacity():
+    src, dst = random_graph(4000, 4, seed=0)
+    job = PageRankJob(src, dst, 4000, _nodes(), mode="hemt",
+                      weights=[1.0, 0.4])
+    sizes = np.bincount(job.owner, minlength=2)
+    assert sizes[0] / sizes.sum() == pytest.approx(1.0 / 1.4, abs=0.02)
+
+
+def test_pagerank_hemt_beats_homt_short_stages():
+    """Fig 18: short iterations + overhead -> microtasking loses."""
+    src, dst = random_graph(3000, 4, seed=4)
+    t = {}
+    for mode, kw in (("hemt", {"weights": [1.0, 0.4]}),
+                     ("homt", {"n_tasks": 32}), ("even", {})):
+        job = PageRankJob(src, dst, 3000, _nodes(overhead=0.1), mode=mode, **kw)
+        job.run(10)
+        t[mode] = job.total_time()
+    assert t["hemt"] < t["homt"] and t["hemt"] < t["even"]
