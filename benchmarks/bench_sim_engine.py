@@ -1,0 +1,72 @@
+"""Simulation-engine throughput — the perf tentpole's trajectory rows.
+
+Sweeps the HomT microtask regime (4 heterogeneous nodes) at 1k/10k/100k
+tasks on the fast path, times the event-calendar path on an I/O-bound
+stage, and pins the legacy ``_run_stage`` rescan loop against the fast
+path at 10k tasks (the acceptance row: >= 5x).  ``run.py --json`` persists
+these rows (plus the kernel rows) to BENCH_sim.json.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchRow, timed
+from repro.core.simulator import SimNode, SimTask, _run_stage, run_pull_stage
+
+SPEEDS = [1.0, 0.8, 0.5, 0.4]
+OVERHEAD = 0.01
+TOTAL_WORK = 100.0
+
+
+def _nodes() -> List[SimNode]:
+    return [SimNode.constant(f"n{i}", s, OVERHEAD)
+            for i, s in enumerate(SPEEDS)]
+
+
+def _tasks(n: int) -> List[SimTask]:
+    per = TOTAL_WORK / n
+    return [SimTask(per, task_id=i) for i in range(n)]
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    nodes = _nodes()
+
+    fast_us = {}
+    for n in (1_000, 10_000, 100_000):
+        tasks = _tasks(n)
+        res, us = timed(run_pull_stage, nodes, tasks, repeat=5)
+        fast_us[n] = us
+        out.append(BenchRow(
+            f"sim_engine/pull_{n}", us,
+            f"tasks_per_s={n / (us / 1e6):.0f};"
+            f"completion={res.completion:.3f};idle={res.idle_time:.4f}"))
+
+    # event-calendar path (flow-shared I/O forces it off the closed form)
+    n = 10_000
+    io_tasks = [SimTask(TOTAL_WORK / n, io_mb=0.05, datanode=i % 4, task_id=i)
+                for i in range(n)]
+    res, us = timed(run_pull_stage, nodes, io_tasks, uplink_bw=50.0, repeat=5)
+    out.append(BenchRow(
+        f"sim_engine/pull_io_{n}", us,
+        f"tasks_per_s={n / (us / 1e6):.0f};completion={res.completion:.3f}"))
+
+    # acceptance row: legacy rescan loop vs. fast path at 10k microtasks
+    # (_run_stage drains its queues, so each repeat gets a fresh copy)
+    n = 10_000
+    _, us_legacy = timed(
+        lambda: _run_stage(_nodes(), [_tasks(n)], pull=True), repeat=3)
+    out.append(BenchRow(
+        f"sim_engine/speedup_pull_{n}", us_legacy,
+        f"legacy_us={us_legacy:.0f};fast_us={fast_us[n]:.0f};"
+        f"speedup={us_legacy / fast_us[n]:.1f}x"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

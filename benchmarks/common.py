@@ -15,6 +15,10 @@ class BenchRow:
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
 
+    def as_dict(self) -> dict:
+        return {"name": self.name, "us_per_call": round(self.us_per_call, 1),
+                "derived": self.derived}
+
 
 def timed(fn: Callable, *args, repeat: int = 3, **kw):
     """Returns (result, us_per_call)."""

@@ -1,10 +1,18 @@
 """Benchmark driver: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig17      # substring filter
+  PYTHONPATH=src python -m benchmarks.run                 # all, CSV to stdout
+  PYTHONPATH=src python -m benchmarks.run fig17           # substring filter
+  PYTHONPATH=src python -m benchmarks.run --json          # + BENCH_sim.json
+  PYTHONPATH=src python -m benchmarks.run --json out.json
+
+``--json`` persists the perf-trajectory rows — simulator engine throughput
+at 1k/10k/100k tasks (benchmarks.bench_sim_engine) and the kernel rows
+(benchmarks.bench_kernels) — so successive PRs can diff BENCH_sim.json.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
@@ -17,25 +25,65 @@ MODULES = [
     "benchmarks.bench_fig17_kmeans",
     "benchmarks.bench_fig18_pagerank",
     "benchmarks.bench_hemt_dp",
+    "benchmarks.bench_sim_engine",
     "benchmarks.bench_kernels",
 ]
 
+# modules whose rows land in the --json perf-trajectory file
+JSON_SECTIONS = {
+    "benchmarks.bench_sim_engine": "sim",
+    "benchmarks.bench_kernels": "kernels",
+}
+
 
 def main() -> None:
-    flt = sys.argv[1] if len(sys.argv) > 1 else ""
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("filter", nargs="?", default="",
+                        help="substring filter on module names")
+    parser.add_argument("--json", nargs="?", const="BENCH_sim.json",
+                        default=None, metavar="PATH",
+                        help="also write perf-trajectory rows as JSON "
+                             "(default path: BENCH_sim.json; path must end "
+                             "in .json — write `run.py <filter> --json`, a "
+                             "bare word after --json is taken as the path)")
+    args = parser.parse_args()
+    if args.json is not None and not args.json.endswith(".json"):
+        parser.error(f"--json path {args.json!r} must end in .json "
+                     f"(did you mean `run.py {args.json} --json`?)")
+
     print("name,us_per_call,derived")
     failures = 0
+    sections: dict = {name: [] for name in JSON_SECTIONS.values()}
     for modname in MODULES:
-        if flt and flt not in modname:
+        if args.filter and args.filter not in modname:
             continue
         try:
             mod = __import__(modname, fromlist=["rows"])
-            for row in mod.rows():
+            mod_rows = list(mod.rows())
+            for row in mod_rows:
                 print(row.csv(), flush=True)
+            section = JSON_SECTIONS.get(modname)
+            if section is not None:
+                sections[section].extend(r.as_dict() for r in mod_rows)
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{modname},ERROR,", flush=True)
             traceback.print_exc()
+    if args.json is not None:
+        # never clobber the tracked trajectory file with a partial view:
+        # only write when every JSON-section module ran and none failed
+        ran_all = all(not args.filter or args.filter in m for m in JSON_SECTIONS)
+        if failures:
+            print(f"not writing {args.json}: {failures} module(s) failed",
+                  file=sys.stderr)
+        elif not ran_all:
+            print(f"not writing {args.json}: filter {args.filter!r} excludes "
+                  "perf-trajectory modules", file=sys.stderr)
+        else:
+            with open(args.json, "w") as fh:
+                json.dump({"schema": 1, **sections}, fh, indent=1)
+                fh.write("\n")
+            print(f"wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -9,6 +9,8 @@ Submodules:
   straggler   — Claim 1 bound, detection, speculation, elastic re-skew
   hdfs_model  — Claim 2 storage-contention model (§3)
   simulator   — discrete-event cluster simulator (the paper's testbed)
+  engine      — fast-path engine behind the simulator's stage runners
+                (event calendar + vectorized closed forms)
   planner     — HeMT-DP grain planner used by the training runtime
 """
 from repro.core.estimators import (  # noqa: F401

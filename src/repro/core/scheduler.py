@@ -5,6 +5,11 @@ and burstable HeMT — paper §5, §6.
 WordCount jobs through a submission queue; here also: a sequence of training
 steps): partition by current speed estimates -> run (simulated or real) ->
 feed observed (d_i, t_i) back into the AR(1) estimator.
+
+All schedulers simulate through ``run_pull_stage``/``run_static_stage`` and
+therefore ride the fast-path engine (``repro.core.engine``): the constant-
+speed stages every scheduler below emits take the vectorized closed forms,
+so job sweeps (Fig 7/8/13, multi-stage Fig 18) scale to large task counts.
 """
 from __future__ import annotations
 
@@ -156,16 +161,22 @@ class MultiStageJob:
 
     def run(self, nodes: Sequence[SimNode], weights: Optional[Sequence[float]],
             n_tasks_per_stage: Optional[int] = None) -> Tuple[float, List[StageResult]]:
-        """weights=None -> HomT with n_tasks_per_stage; else HeMT skewed."""
+        """weights=None -> HomT with n_tasks_per_stage; else HeMT skewed.
+
+        Each stage restarts from the previous stage's completion (program
+        barrier); the per-stage uniform task lists keep every stage on the
+        engine's closed-form path for constant-speed clusters.
+        """
         t, results = 0.0, []
+        norm = None if weights is None else sum(weights)
         for w in self.stage_works:
             if weights is None:
                 per = w / n_tasks_per_stage
-                tasks = [SimTask(per, task_id=i) for i in range(n_tasks_per_stage)]
+                tasks = [SimTask(per, task_id=i)
+                         for i in range(n_tasks_per_stage)]
                 res = run_pull_stage(nodes, tasks, start_time=t)
             else:
-                s = sum(weights)
-                assignments = [[SimTask(w * wi / s, task_id=i)]
+                assignments = [[SimTask(w * wi / norm, task_id=i)]
                                for i, wi in enumerate(weights)]
                 res = run_static_stage(nodes, assignments, start_time=t)
             results.append(res)

@@ -14,6 +14,11 @@ Models, per §5-§6 of the paper:
 
 All times are seconds, work is in abstract units (1 unit = 1 second on a
 speed-1.0 node), I/O sizes in MB, bandwidths in MB/s.
+
+``run_pull_stage``/``run_static_stage`` dispatch to the layered fast-path
+engine in ``repro.core.engine`` (event calendar + vectorized closed forms);
+the ``_run_stage`` rescan loop below is retained as the reference oracle the
+engine's differential tests are pinned against.
 """
 from __future__ import annotations
 
@@ -107,7 +112,7 @@ class SimNode:
 # tasks & storage
 # --------------------------------------------------------------------------
 
-@dataclass
+@dataclass(slots=True)
 class SimTask:
     """cpu_work: seconds-at-speed-1; io_mb: input bytes to fetch;
     datanode: which storage node serves it (-1 = no I/O)."""
@@ -117,7 +122,7 @@ class SimTask:
     task_id: int = -1
 
 
-@dataclass
+@dataclass(slots=True)
 class TaskRecord:
     task_id: int
     node: str
@@ -131,11 +136,28 @@ class StageResult:
     records: List[TaskRecord]
     node_finish: Dict[str, float]
     completion: float            # max end
-    idle_time: float             # Claim 1 quantity: max finish - min finish
+    # Claim 1 quantity: max finish - min finish over nodes that ran >= 1
+    # task (a node that never received work sits at start_time and would
+    # otherwise inflate the barrier-idle metric).
+    idle_time: float
 
     @property
     def makespan(self) -> float:
         return self.completion
+
+
+def _stage_result(records: List[TaskRecord], node_finish: Dict[str, float],
+                  start_time: float) -> StageResult:
+    """Shared result assembly (legacy oracle + engine paths): idle time is
+    the finish spread over nodes that actually ran work, 0 if none did."""
+    ran = {r.node for r in records}
+    if ran:
+        finishes = [node_finish[name] for name in ran]
+        idle = max(finishes) - min(finishes)
+    else:
+        idle = 0.0
+    completion = max(node_finish.values()) if node_finish else start_time
+    return StageResult(records, node_finish, completion, idle)
 
 
 # --------------------------------------------------------------------------
@@ -147,8 +169,10 @@ _EPS = 1e-9
 
 def _run_stage(nodes: Sequence[SimNode], queues: List[List[SimTask]],
                pull: bool, uplink_bw: Optional[float] = None,
-               n_datanodes: int = 0, start_time: float = 0.0) -> StageResult:
-    """Core fluid/event simulation.
+               start_time: float = 0.0) -> StageResult:
+    """Core fluid/event simulation — the reference oracle (O(N·T) rescan
+    loop; the fast paths in ``repro.core.engine`` are differential-tested
+    against it).
 
     queues: if pull, queues[0] is the shared pending queue; otherwise
     queues[i] is node i's private queue (HeMT macrotask list).
@@ -207,14 +231,19 @@ def _run_stage(nodes: Sequence[SimNode], queues: List[List[SimTask]],
         if guard > 10_000_000:
             raise RuntimeError("simulator event-loop runaway")
         rates = io_rates()
+        # per-reader rate, computed once per iteration and shared by the
+        # event search and the io advancement below
+        node_rate = [rates.get(r.task.datanode, math.inf)
+                     if r and r.io_left > _EPS and r.task.datanode >= 0
+                     else None for r in running]
         # next event: earliest of (cpu completion if io done / will be done,
         # io completion) over running tasks
         t_next, who = math.inf, -1
         for i, r in enumerate(running):
             if not r:
                 continue
-            if r.io_left > _EPS and r.task.datanode >= 0:
-                rate = rates.get(r.task.datanode, math.inf)
+            rate = node_rate[i]
+            if rate is not None:
                 t_io = t + (r.io_left / rate if math.isfinite(rate) else 0.0)
                 cand = max(t_io, r.cpu_done_at)
                 # but an io completion *event* (another flow freeing up) can
@@ -227,8 +256,8 @@ def _run_stage(nodes: Sequence[SimNode], queues: List[List[SimTask]],
                 t_next, who = cand_evt, i
         # advance io progress to t_next
         for i, r in enumerate(running):
-            if r and r.io_left > _EPS and r.task.datanode >= 0:
-                rate = rates.get(r.task.datanode, math.inf)
+            rate = node_rate[i]
+            if rate is not None:
                 if math.isfinite(rate):
                     r.io_left = max(0.0, r.io_left - rate * (t_next - t))
                 else:
@@ -247,29 +276,36 @@ def _run_stage(nodes: Sequence[SimNode], queues: List[List[SimTask]],
         # else: io finished but cpu still running (or vice versa): loop again;
         # rates recompute naturally.
 
-    finishes = list(node_finish.values())
-    return StageResult(records, node_finish, max(finishes),
-                       max(finishes) - min(finishes))
+    return _stage_result(records, node_finish, start_time)
 
 
 def run_pull_stage(nodes: Sequence[SimNode], tasks: Sequence[SimTask],
                    uplink_bw: Optional[float] = None,
                    start_time: float = 0.0) -> StageResult:
-    """HomT: shared queue, idle nodes pull (paper Claim 1 setting)."""
-    q = [list(tasks)]
-    return _run_stage(nodes, q, pull=True, uplink_bw=uplink_bw,
-                      start_time=start_time)
+    """HomT: shared queue, idle nodes pull (paper Claim 1 setting).
+
+    Rides the fast-path engine: vectorized closed form for uniform tasks on
+    constant-speed nodes without effective I/O, event calendar otherwise.
+    """
+    from repro.core.engine import simulate_stage
+    return simulate_stage(nodes, [tasks], pull=True, uplink_bw=uplink_bw,
+                          start_time=start_time)
 
 
 def run_static_stage(nodes: Sequence[SimNode],
                      assignments: Sequence[Sequence[SimTask]],
                      uplink_bw: Optional[float] = None,
                      start_time: float = 0.0) -> StageResult:
-    """HeMT: one (or more) pre-assigned macrotasks per node."""
+    """HeMT: one (or more) pre-assigned macrotasks per node.
+
+    Rides the fast-path engine: per-node vectorized cumsum for constant
+    speeds without effective I/O, event calendar otherwise.
+    """
     if len(assignments) != len(nodes):
         raise ValueError("need one task list per node")
-    return _run_stage(nodes, [list(a) for a in assignments], pull=False,
-                      uplink_bw=uplink_bw, start_time=start_time)
+    from repro.core.engine import simulate_stage
+    return simulate_stage(nodes, assignments, pull=False,
+                          uplink_bw=uplink_bw, start_time=start_time)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,349 @@
+"""Fast-path engine vs. the legacy ``_run_stage`` oracle.
+
+Differential property tests: randomized clusters (multi-segment speed
+profiles, per-task overheads, flow-shared I/O) run through both the event
+calendar and the public auto-selecting entry points must agree with the
+oracle on completion, idle time, per-node finishes and per-task records to
+1e-9.  Plus closed-form/event-path equivalence, tie-breaking, cursor
+exactness, and the idle-time accounting fix.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.engine import (
+    ProfileCursor, plan_path, run_stage_events, simulate_stage,
+)
+from repro.core.simulator import (
+    SimNode, SimTask, _run_stage, run_pull_stage, run_static_stage,
+)
+
+REL = ABS = 1e-9
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _approx(x):
+    return pytest.approx(x, rel=REL, abs=ABS)
+
+
+def assert_results_match(oracle, got):
+    assert got.completion == _approx(oracle.completion)
+    assert got.idle_time == _approx(oracle.idle_time)
+    assert set(got.node_finish) == set(oracle.node_finish)
+    for name, t in oracle.node_finish.items():
+        assert got.node_finish[name] == _approx(t)
+    ra = {r.task_id: r for r in oracle.records}
+    rb = {r.task_id: r for r in got.records}
+    assert ra.keys() == rb.keys()
+    for tid, a in ra.items():
+        b = rb[tid]
+        assert b.node == a.node, f"task {tid}: {b.node} != {a.node}"
+        assert b.start == _approx(a.start)
+        assert b.end == _approx(a.end)
+        assert b.cpu_work == _approx(a.cpu_work)
+
+
+def random_cluster(rng, max_nodes=4, constant=False):
+    n = int(rng.integers(1, max_nodes + 1))
+    nodes = []
+    for i in range(n):
+        if constant:
+            prof = [(0.0, float(rng.uniform(0.2, 3.0)))]
+        else:
+            n_seg = int(rng.integers(1, 4))
+            breaks = np.concatenate(
+                [[0.0], np.cumsum(rng.uniform(0.5, 5.0, n_seg - 1))])
+            prof = [(float(t), float(rng.uniform(0.2, 3.0))) for t in breaks]
+        nodes.append(SimNode(f"n{i}", prof, float(rng.uniform(0.0, 0.3))))
+    return nodes
+
+
+def random_tasks(rng, with_io, uniform=False):
+    n_tasks = int(rng.integers(1, 26))
+    work = float(rng.uniform(0.01, 5.0))
+    tasks = []
+    for i in range(n_tasks):
+        io = float(rng.uniform(0.1, 30.0)) if with_io and rng.random() < 0.7 \
+            else 0.0
+        tasks.append(SimTask(work if uniform else float(rng.uniform(0.01, 5.0)),
+                             io, int(rng.integers(0, 3)), task_id=i))
+    return tasks
+
+
+def split_static(rng, tasks, n):
+    queues = [[] for _ in range(n)]
+    for t in tasks:
+        queues[int(rng.integers(0, n))].append(t)
+    return queues
+
+
+# --------------------------------------------------------------------------
+# differential properties vs. the oracle
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_pull_cpu_only(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    tasks = random_tasks(rng, with_io=False)
+    start = float(rng.uniform(0.0, 2.0))
+    oracle = _run_stage(nodes, [list(tasks)], pull=True, start_time=start)
+    assert_results_match(
+        oracle, run_stage_events(nodes, [tasks], pull=True, start_time=start))
+    assert_results_match(
+        oracle, simulate_stage(nodes, [tasks], pull=True, start_time=start))
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_pull_with_io(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    tasks = random_tasks(rng, with_io=True)
+    bw = float(rng.uniform(5.0, 50.0))
+    oracle = _run_stage(nodes, [list(tasks)], pull=True, uplink_bw=bw)
+    assert_results_match(
+        oracle, run_stage_events(nodes, [tasks], pull=True, uplink_bw=bw))
+    assert_results_match(
+        oracle, simulate_stage(nodes, [tasks], pull=True, uplink_bw=bw))
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_static_cpu_only(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    queues = split_static(rng, random_tasks(rng, with_io=False), len(nodes))
+    start = float(rng.uniform(0.0, 2.0))
+    oracle = _run_stage(nodes, [list(q) for q in queues], pull=False,
+                        start_time=start)
+    assert_results_match(
+        oracle, run_stage_events(nodes, queues, pull=False, start_time=start))
+    assert_results_match(
+        oracle, simulate_stage(nodes, queues, pull=False, start_time=start))
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_static_with_io(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    queues = split_static(rng, random_tasks(rng, with_io=True), len(nodes))
+    bw = float(rng.uniform(5.0, 50.0))
+    oracle = _run_stage(nodes, [list(q) for q in queues], pull=False,
+                        uplink_bw=bw)
+    assert_results_match(
+        oracle, run_stage_events(nodes, queues, pull=False, uplink_bw=bw))
+    assert_results_match(
+        oracle, simulate_stage(nodes, queues, pull=False, uplink_bw=bw))
+
+
+# --------------------------------------------------------------------------
+# closed-form fast paths == event path == oracle
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+def test_closed_form_pull_matches_event_and_oracle(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, max_nodes=5, constant=True)
+    tasks = random_tasks(rng, with_io=False, uniform=True)
+    assert plan_path(nodes, [tasks], pull=True) == "closed-pull"
+    oracle = _run_stage(nodes, [list(tasks)], pull=True)
+    assert_results_match(oracle, run_pull_stage(nodes, tasks))
+    assert_results_match(oracle,
+                         run_stage_events(nodes, [tasks], pull=True))
+
+
+@given(seed=st.integers(0, 10_000))
+def test_closed_form_static_matches_event_and_oracle(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, max_nodes=5, constant=True)
+    queues = split_static(rng, random_tasks(rng, with_io=False), len(nodes))
+    assert plan_path(nodes, queues, pull=False) == "closed-static"
+    oracle = _run_stage(nodes, [list(q) for q in queues], pull=False)
+    assert_results_match(oracle, run_static_stage(nodes, queues))
+    assert_results_match(oracle,
+                         run_stage_events(nodes, queues, pull=False))
+
+
+def test_pull_tie_breaking_identical_nodes():
+    """Equal-speed nodes produce exactly tied events; both paths must break
+    ties like the oracle's lowest-index scan (task m -> node m mod n)."""
+    nodes = [SimNode.constant(f"n{i}", 1.0, 0.1) for i in range(4)]
+    tasks = [SimTask(0.5, task_id=i) for i in range(101)]
+    oracle = _run_stage(nodes, [list(tasks)], pull=True)
+    for got in (run_pull_stage(nodes, tasks),
+                run_stage_events(nodes, [tasks], pull=True)):
+        assert_results_match(oracle, got)
+    by_node = {nd.name: 0 for nd in nodes}
+    for r in oracle.records:
+        by_node[r.node] += 1
+    assert by_node == {"n0": 26, "n1": 25, "n2": 25, "n3": 25}
+
+
+def test_path_selection_rules():
+    const = [SimNode.constant("a", 1.0)]
+    multi = [SimNode("a", [(0.0, 1.0), (5.0, 0.5)])]
+    uniform = [SimTask(1.0, task_id=0), SimTask(1.0, task_id=1)]
+    ragged = [SimTask(1.0, task_id=0), SimTask(2.0, task_id=1)]
+    io = [SimTask(1.0, io_mb=5.0, datanode=0, task_id=0)]
+    assert plan_path(const, [uniform], pull=True) == "closed-pull"
+    assert plan_path(const, [ragged], pull=True) == "event"
+    assert plan_path(multi, [uniform], pull=True) == "event"
+    assert plan_path(const, [io], pull=True, uplink_bw=10.0) == "event"
+    # infinite uplink can never delay a completion -> closed form stays on
+    assert plan_path(const, [io], pull=True, uplink_bw=None) == "closed-pull"
+    assert plan_path(const, [ragged], pull=False) == "closed-static"
+    assert plan_path(multi, [ragged], pull=False) == "event"
+    assert plan_path(const, [io], pull=False, uplink_bw=10.0) == "event"
+
+
+# --------------------------------------------------------------------------
+# profile cursor exactness
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+def test_profile_cursor_bitwise_matches_simnode(seed):
+    rng = np.random.default_rng(seed)
+    n_seg = int(rng.integers(1, 5))
+    breaks = np.concatenate([[0.0], np.cumsum(rng.uniform(0.5, 4.0, n_seg - 1))])
+    prof = [(float(t), float(rng.uniform(0.2, 3.0))) for t in breaks]
+    node = SimNode("a", prof)
+    cur = ProfileCursor(prof)
+    t0 = 0.0
+    for _ in range(20):
+        t0 += float(rng.uniform(0.0, 2.0))
+        work = float(rng.uniform(0.0, 4.0))
+        assert cur.finish_time(work, t0) == node.finish_time(work, t0)
+    cur2 = ProfileCursor(prof)
+    t0 = 0.0
+    for _ in range(20):
+        t0 += float(rng.uniform(0.0, 2.0))
+        t1 = t0 + float(rng.uniform(0.0, 3.0))
+        assert cur2.work_between(t0, t1) == pytest.approx(
+            node.work_between(t0, t1), rel=1e-12, abs=1e-12)
+
+
+def test_cursor_burstable_profile_edges():
+    prof = [(0.0, 2.0), (5.0, 0.5)]
+    cur = ProfileCursor(prof)
+    assert cur.finish_time(10.0, 0.0) == 5.0          # exactly at the break
+    assert cur.finish_time(1.0, 6.0) == 8.0           # fully in the tail
+    assert ProfileCursor(prof).finish_time(0.0, 3.0) == 3.0
+
+
+# --------------------------------------------------------------------------
+# idle-time accounting (satellite fix)
+# --------------------------------------------------------------------------
+
+def test_idle_time_ignores_nodes_that_never_ran():
+    nodes = [SimNode.constant(f"n{i}", 1.0) for i in range(3)]
+    res = run_pull_stage(nodes, [SimTask(4.0, task_id=0)])
+    assert res.completion == pytest.approx(4.0)
+    assert res.idle_time == pytest.approx(0.0)        # was 4.0 pre-fix
+    # oracle agrees after the fix
+    legacy = _run_stage(nodes, [[SimTask(4.0, task_id=0)]], pull=True)
+    assert legacy.idle_time == pytest.approx(0.0)
+    # static with an empty assignment: the empty node is excluded too
+    res = run_static_stage(nodes, [[SimTask(2.0, task_id=0)],
+                                   [SimTask(3.0, task_id=1)], []])
+    assert res.idle_time == pytest.approx(1.0)
+    # but nodes that ran still count in full
+    res = run_static_stage(nodes, [[SimTask(2.0, task_id=0)],
+                                   [SimTask(3.0, task_id=1)],
+                                   [SimTask(0.5, task_id=2)]])
+    assert res.idle_time == pytest.approx(2.5)
+
+
+def test_empty_stage_is_well_formed():
+    nodes = [SimNode.constant("a", 1.0)]
+    res = run_pull_stage(nodes, [], start_time=7.0)
+    assert res.records == []
+    assert res.completion == pytest.approx(7.0)
+    assert res.idle_time == pytest.approx(0.0)
+
+
+# --------------------------------------------------------------------------
+# engine-specific edge cases
+# --------------------------------------------------------------------------
+
+def test_io_bound_completion_waits_for_flow_share():
+    # two co-readers on one datanode: 100 MB each over a shared 100 MB/s
+    # uplink -> both finish at t=2 even though CPU work is done at t=0.1
+    nodes = [SimNode.constant(f"n{i}", 1.0) for i in range(2)]
+    tasks = [SimTask(0.1, io_mb=100.0, datanode=0, task_id=i)
+             for i in range(2)]
+    res = run_stage_events(nodes, [tasks], pull=True, uplink_bw=100.0)
+    assert res.completion == pytest.approx(2.0, rel=0.05)
+
+
+def test_reader_departure_repriced_incrementally():
+    # reader A (50 MB) leaves the shared flow at t=1; B's second half then
+    # runs at full rate: B = 50 MB shared (1 s) + 50 MB solo (0.5 s)
+    nodes = [SimNode.constant(f"n{i}", 1.0) for i in range(2)]
+    tasks = [SimTask(0.01, io_mb=50.0, datanode=0, task_id=0),
+             SimTask(0.01, io_mb=100.0, datanode=0, task_id=1)]
+    res = run_static_stage(nodes, [[tasks[0]], [tasks[1]]], uplink_bw=100.0)
+    ends = {r.task_id: r.end for r in res.records}
+    assert ends[0] == pytest.approx(1.0, rel=1e-6)
+    assert ends[1] == pytest.approx(1.5, rel=1e-6)
+
+
+def test_simultaneous_io_drains_stay_causal():
+    """Deliberate divergence from the oracle: identical co-reading tasks
+    drain at the same instant; the legacy loop then completes the non-owner
+    retroactively at its cpu_done_at (before its I/O could have finished)
+    and feeds a negative time delta into every other flow.  The engine must
+    stay causal: no record may end before its start + io_mb/uplink_bw, and
+    every node's records must be time-ordered."""
+    nodes = [SimNode.constant(f"w{i}", 1.0, overhead=0.1) for i in range(2)]
+    # 8 identical network-bound tasks, 2 per datanode -> exact drain ties
+    tasks = [SimTask(0.125, io_mb=64.0, datanode=i % 4, task_id=i)
+             for i in range(8)]
+    res = run_stage_events(nodes, [tasks], pull=True, uplink_bw=8.0)
+    by_id = {t.task_id: t for t in tasks}
+    last_end = {}
+    for r in sorted(res.records, key=lambda r: r.start):
+        assert r.end - r.start >= by_id[r.task_id].io_mb / 8.0 - 1e-9
+        assert r.start >= last_end.get(r.node, 0.0) - 1e-9
+        last_end[r.node] = r.end
+    assert res.completion == pytest.approx(max(r.end for r in res.records))
+
+
+def test_zero_work_tasks_complete_instantly():
+    nodes = [SimNode.constant("a", 1.0, overhead=0.25)]
+    tasks = [SimTask(0.0, task_id=i) for i in range(4)]
+    oracle = _run_stage(nodes, [list(tasks)], pull=True)
+    got = run_pull_stage(nodes, tasks)
+    assert_results_match(oracle, got)
+    assert got.completion == pytest.approx(1.0)
+
+
+def test_multisegment_profile_straddles_tasks():
+    # 2.0-speed for 5 s then 0.5: 12 units of work = 5 s (10 units) + 4 s
+    nodes = [SimNode("a", [(0.0, 2.0), (5.0, 0.5)])]
+    res = run_static_stage(nodes, [[SimTask(12.0, task_id=0)]])
+    assert res.completion == pytest.approx(9.0)
+    # and a queue of tasks crossing the break matches the oracle
+    tasks = [SimTask(3.0, task_id=i) for i in range(5)]
+    oracle = _run_stage(nodes, [list(tasks)], pull=True)
+    assert_results_match(oracle, run_pull_stage(nodes, tasks))
+
+
+def test_large_pull_sweep_smoke():
+    """10k microtasks on 4 heterogeneous nodes — the benchmark regime —
+    stays exact w.r.t. per-node totals and conservation of tasks."""
+    nodes = [SimNode.constant(f"n{i}", s, 0.01)
+             for i, s in enumerate([1.0, 0.8, 0.5, 0.4])]
+    tasks = [SimTask(100.0 / 10_000, task_id=i) for i in range(10_000)]
+    res = run_pull_stage(nodes, tasks)
+    assert len(res.records) == 10_000
+    counts = {nd.name: 0 for nd in nodes}
+    for r in res.records:
+        counts[r.node] += 1
+    assert sum(counts.values()) == 10_000
+    # faster nodes take proportionally more microtasks
+    assert counts["n0"] > counts["n2"] > 0
+    assert res.idle_time <= max(0.01 + 100.0 / 10_000 / 0.4, 0.5)

@@ -111,6 +111,47 @@ def test_identical_math_across_modes():
     assert finals["hemt"] == pytest.approx(finals["static-even"], abs=1e-6)
 
 
+def test_run_step_issues_one_accumulate_dispatch_per_step():
+    """The batched fast path folds all grains of a step with one jitted
+    lax.scan call — O(1) dispatches per step, not O(grains)."""
+    cfg, bundle = _tiny()
+    slices = [SliceSpec("s0"), SliceSpec("s1")]
+    tr = HeMTTrainer(cfg, bundle, slices, grain_batch=2, global_batch=16,
+                     seq_len=16, mode="hemt")
+    st = train_state_init(KEY, cfg, bundle)
+    st = tr.run(st, 3)                  # 3 steps x 8 grains each
+    assert tr.grain_dispatches == 3
+
+
+def test_batched_accumulate_matches_per_grain_loop():
+    """lax.scan fold == the per-grain python loop, grain for grain."""
+    import numpy as np
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.runtime.train_loop import make_grain_accumulate
+    cfg, bundle = _tiny()
+    corpus = SyntheticCorpus(cfg.vocab_size, 16, seed=3)
+    batches = [corpus.batch(range(i * 2, i * 2 + 2)) for i in range(4)]
+
+    state = train_state_init(KEY, cfg, bundle)
+    grain_step = make_grain_step(cfg, bundle)
+    acc_loop = grain_acc_init(state.params)
+    for b in batches:
+        acc_loop = grain_step(state.params, acc_loop,
+                              {k: jnp.asarray(v) for k, v in b.items()})
+
+    accumulate = make_grain_accumulate(cfg, bundle)
+    stacked = {k: jnp.asarray(np.stack([b[k] for b in batches]))
+               for k in batches[0]}
+    acc_scan = accumulate(state.params, grain_acc_init(state.params), stacked)
+
+    assert int(acc_scan.n) == int(acc_loop.n) == 4
+    assert float(acc_scan.loss_sum) == pytest.approx(
+        float(acc_loop.loss_sum), rel=1e-5)
+    err = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                       acc_loop.grads, acc_scan.grads)
+    assert max(jax.tree.leaves(err)) < 1e-4
+
+
 def test_interference_triggers_reskew():
     """Paper Fig 7 in the training loop: slice slows mid-run, plan adapts."""
     cfg, bundle = _tiny()
@@ -252,22 +293,29 @@ def test_corpus_determinism_and_batch():
 
 @pytest.mark.parametrize("scheme", ["int8", "topk"])
 def test_training_descends_under_dcn_compression(scheme):
-    """EF-compressed gradients (the DCN all-reduce payload) still learn."""
+    """EF-compressed gradients (the DCN all-reduce payload) still learn.
+
+    Descent is measured on a fixed probe batch before vs. after training:
+    the running loss is evaluated on a *different* synthetic batch each step,
+    and its ~0.1-nat inter-batch difficulty spread swamps the few-step trend.
+    """
     import dataclasses as dc
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.models.model import loss_fn
     cfg, bundle = _tiny()
     bundle = bundle.replace(train=dc.replace(bundle.train,
                                              compression=scheme))
-    from repro.data.pipeline import SyntheticCorpus
     corpus = SyntheticCorpus(cfg.vocab_size, 24, seed=2)
+    probe = {k: jnp.asarray(v) for k, v in corpus.batch(range(8)).items()}
+    eval_loss = jax.jit(lambda p: loss_fn(p, probe, cfg))
     step = jax.jit(make_train_step(cfg, bundle))
     state = train_state_init(KEY, cfg, bundle)
-    losses = []
+    before = float(eval_loss(state.params))
     for s in range(10):
         batch = {k: jnp.asarray(v)
                  for k, v in corpus.batch(range(s * 8, s * 8 + 8)).items()}
-        state, m = step(state, batch)
-        losses.append(float(m["loss"]))
-    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+        state, _ = step(state, batch)
+    assert float(eval_loss(state.params)) < before - 0.05
 
 
 def test_speculative_copies():

@@ -59,6 +59,16 @@ def test_static_stage_respects_assignment():
     assert res.idle_time == pytest.approx(2.0)
 
 
+def test_idle_time_counts_only_nodes_that_ran():
+    """Pull mode with fewer tasks than nodes: a node that never receives a
+    task sits at start_time and must not inflate the Claim-1 idle metric."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0),
+             SimNode.constant("c", 1.0)]
+    res = run_pull_stage(nodes, [SimTask(6.0, task_id=0)])
+    assert res.completion == pytest.approx(6.0)
+    assert res.idle_time == pytest.approx(0.0)
+
+
 def test_uplink_sharing_slows_coreaders():
     # two readers on one datanode share bandwidth -> 2x io time
     nodes = [SimNode.constant(f"n{i}", 1.0) for i in range(2)]
