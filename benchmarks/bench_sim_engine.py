@@ -3,14 +3,20 @@
 Sweeps the HomT microtask regime (4 heterogeneous nodes) at 1k/10k/100k
 tasks on the fast path, times the event-calendar path on an I/O-bound
 stage, and pins the legacy ``_run_stage`` rescan loop against the fast
-path at 10k tasks (the acceptance row: >= 5x).  ``run.py --json`` persists
-these rows (plus the kernel rows) to BENCH_sim.json.
+path at 10k tasks.  The closed-form rows added with the whole-job engine
+(``pull_hetero_*``, ``pull_io_sym_*``, ``job_*``) each carry their own
+event-calendar comparison in the derived column (the >= 5x acceptance
+rows).  ``run.py --json`` persists these rows (plus the kernel rows) to
+BENCH_sim.json, and ``run.py --check`` gates regressions against it.
 """
 from __future__ import annotations
 
 from typing import List
 
+import numpy as np
+
 from benchmarks.common import BenchRow, timed
+from repro.core.engine import PullSpec, StaticSpec, run_job, run_stage_events
 from repro.core.simulator import SimNode, SimTask, _run_stage, run_pull_stage
 
 SPEEDS = [1.0, 0.8, 0.5, 0.4]
@@ -28,6 +34,11 @@ def _tasks(n: int) -> List[SimTask]:
     return [SimTask(per, task_id=i) for i in range(n)]
 
 
+def _hetero_works(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (TOTAL_WORK / n) * rng.uniform(0.5, 1.5, n)
+
+
 def rows() -> List[BenchRow]:
     out = []
     nodes = _nodes()
@@ -42,7 +53,8 @@ def rows() -> List[BenchRow]:
             f"tasks_per_s={n / (us / 1e6):.0f};"
             f"completion={res.completion:.3f};idle={res.idle_time:.4f}"))
 
-    # event-calendar path (flow-shared I/O forces it off the closed form)
+    # event-calendar path (multi-datanode flow-shared I/O keeps it off
+    # every closed form)
     n = 10_000
     io_tasks = [SimTask(TOTAL_WORK / n, io_mb=0.05, datanode=i % 4, task_id=i)
                 for i in range(n)]
@@ -50,6 +62,77 @@ def rows() -> List[BenchRow]:
     out.append(BenchRow(
         f"sim_engine/pull_io_{n}", us,
         f"tasks_per_s={n / (us / 1e6):.0f};completion={res.completion:.3f}"))
+
+    # heterogeneous task sizes (the Fig 18 skewed-shuffle regime): the
+    # merged-grid scan vs. the event calendar.  The headline row measures
+    # the record-free whole-job summary (what Fig 18-style sweeps consume);
+    # records_speedup is the full-records run_pull_stage comparison.
+    n = 10_000
+    hworks = _hetero_works(n)
+    htasks = [SimTask(float(w), task_id=i) for i, w in enumerate(hworks)]
+    hspec = PullSpec(works=tuple(float(w) for w in hworks))
+    sched, us = timed(lambda: run_job(_nodes(), [hspec]), repeat=9)
+    _, us_rec = timed(run_pull_stage, nodes, htasks, repeat=5)
+    _, us_evt = timed(run_stage_events, nodes, [htasks], True, repeat=5)
+    out.append(BenchRow(
+        f"sim_engine/pull_hetero_{n}", us,
+        f"event_us={us_evt:.0f};speedup={us_evt / us:.1f}x;"
+        f"records_speedup={us_evt / us_rec:.1f}x;"
+        f"completion={sched.completion:.3f}"))
+
+    # symmetric co-reader I/O (equal io_mb, one datanode, network-governed):
+    # piecewise-linear closed form vs. the event calendar
+    sym_tasks = [SimTask(TOTAL_WORK / n, io_mb=1.0, datanode=0, task_id=i)
+                 for i in range(n)]
+    res, us = timed(run_pull_stage, nodes, sym_tasks, uplink_bw=50.0,
+                    repeat=5)
+    _, us_evt = timed(run_stage_events, nodes, [sym_tasks], True, 50.0,
+                      repeat=3)
+    out.append(BenchRow(
+        f"sim_engine/pull_io_sym_{n}", us,
+        f"event_us={us_evt:.0f};speedup={us_evt / us:.1f}x;"
+        f"completion={res.completion:.3f}"))
+
+    # whole jobs: run_job carrying finish vectors across barriers vs.
+    # re-entering the event calendar once per stage (Fig 18-style sweep:
+    # 10 stages x 1k skewed tasks = 10k tasks)
+    stages, per_stage = 10, 1_000
+    jworks = _hetero_works(per_stage, seed=1)
+    jspec = PullSpec(works=tuple(float(w) for w in jworks))
+    jtasks = [SimTask(float(w), task_id=i) for i, w in enumerate(jworks)]
+
+    def _job_events() -> float:
+        t, nds = 0.0, _nodes()
+        for _ in range(stages):
+            t = run_stage_events(nds, [jtasks], True, None, t).completion
+        return t
+
+    sched, us = timed(lambda: run_job(_nodes(), [jspec] * stages), repeat=5)
+    t_evt, us_evt = timed(_job_events, repeat=3)
+    assert abs(sched.completion - t_evt) < 1e-6 * t_evt
+    out.append(BenchRow(
+        f"sim_engine/job_pull_{stages}x{per_stage}", us,
+        f"event_us={us_evt:.0f};speedup={us_evt / us:.1f}x;"
+        f"completion={sched.completion:.3f}"))
+
+    # HeMT macrotask job: 1000 static stages over 4 nodes
+    stages = 1_000
+    sspec = StaticSpec(works=(40.0, 30.0, 20.0, 10.0))
+
+    def _static_events() -> float:
+        t, nds = 0.0, _nodes()
+        queues = [[SimTask(w, task_id=i)] for i, w in enumerate(sspec.works)]
+        for _ in range(stages):
+            t = run_stage_events(nds, queues, False, None, t).completion
+        return t
+
+    sched, us = timed(lambda: run_job(_nodes(), [sspec] * stages), repeat=5)
+    t_evt, us_evt = timed(_static_events, repeat=3)
+    assert abs(sched.completion - t_evt) < 1e-6 * t_evt
+    out.append(BenchRow(
+        f"sim_engine/job_static_{stages}x4", us,
+        f"event_us={us_evt:.0f};speedup={us_evt / us:.1f}x;"
+        f"completion={sched.completion:.3f}"))
 
     # acceptance row: legacy rescan loop vs. fast path at 10k microtasks
     # (_run_stage drains its queues, so each repeat gets a fresh copy)

@@ -4,10 +4,17 @@
   PYTHONPATH=src python -m benchmarks.run fig17           # substring filter
   PYTHONPATH=src python -m benchmarks.run --json          # + BENCH_sim.json
   PYTHONPATH=src python -m benchmarks.run --json out.json
+  PYTHONPATH=src python -m benchmarks.run --check         # CI perf gate
 
 ``--json`` persists the perf-trajectory rows — simulator engine throughput
 at 1k/10k/100k tasks (benchmarks.bench_sim_engine) and the kernel rows
 (benchmarks.bench_kernels) — so successive PRs can diff BENCH_sim.json.
+
+``--check [PATH]`` re-runs only the sim_engine rows and exits non-zero if
+any timed row regressed by more than 2x against the committed baseline
+(or vanished from the fresh run) — the ROADMAP CI gate.  Derived-only
+rows (us_per_call == 0) are skipped; a PR that intentionally changes the
+row set regenerates the baseline with ``--json`` in the same change.
 """
 from __future__ import annotations
 
@@ -36,6 +43,63 @@ JSON_SECTIONS = {
 }
 
 
+def compare_rows(baseline_rows, fresh_rows, threshold: float = 2.0):
+    """Regression messages for fresh sim_engine rows vs. a baseline.
+
+    A baseline row regresses when its fresh ``us_per_call`` exceeds
+    ``threshold`` times the committed one, or when it is missing from the
+    fresh run (renames must regenerate the baseline in the same PR).
+    Derived-only rows (``us_per_call`` <= 0) and rows that exist only in
+    the fresh run (newly added) are ignored.
+    """
+    fresh = {r["name"]: r for r in fresh_rows}
+    msgs = []
+    for base in baseline_rows:
+        base_us = base.get("us_per_call", 0.0)
+        if base_us <= 0.0:
+            continue
+        got = fresh.get(base["name"])
+        if got is None:
+            msgs.append(f"{base['name']}: missing from fresh run")
+        elif got["us_per_call"] > threshold * base_us:
+            msgs.append(f"{base['name']}: {got['us_per_call']:.0f}us vs "
+                        f"baseline {base_us:.0f}us "
+                        f"(>{threshold:g}x regression)")
+    return msgs
+
+
+def run_check(baseline_path: str, fresh_rows=None,
+              threshold: float = 2.0) -> int:
+    """The ``--check`` CI gate: fresh sim_engine rows vs. the committed
+    baseline.  ``fresh_rows`` (dicts like ``BenchRow.as_dict``) can be
+    injected for tests; by default the sim_engine benchmarks run live."""
+    try:
+        with open(baseline_path) as fh:
+            baseline = json.load(fh)
+    except OSError as exc:
+        print(f"cannot read baseline {baseline_path}: {exc}", file=sys.stderr)
+        return 1
+    except json.JSONDecodeError as exc:
+        print(f"baseline {baseline_path} is not valid JSON: {exc}",
+              file=sys.stderr)
+        return 1
+    if fresh_rows is None:
+        from benchmarks import bench_sim_engine
+        fresh_rows = [r.as_dict() for r in bench_sim_engine.rows()]
+    msgs = compare_rows(baseline.get("sim", []), fresh_rows, threshold)
+    for m in msgs:
+        print(f"REGRESSION {m}", file=sys.stderr)
+    if msgs:
+        print(f"{len(msgs)} sim_engine row(s) regressed vs {baseline_path}",
+              file=sys.stderr)
+        return 1
+    n_timed = sum(1 for r in baseline.get("sim", [])
+                  if r.get("us_per_call", 0.0) > 0.0)
+    print(f"OK: {n_timed} timed sim_engine row(s) within {threshold:g}x "
+          f"of {baseline_path}")
+    return 0
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("filter", nargs="?", default="",
@@ -46,7 +110,14 @@ def main() -> None:
                              "(default path: BENCH_sim.json; path must end "
                              "in .json — write `run.py <filter> --json`, a "
                              "bare word after --json is taken as the path)")
+    parser.add_argument("--check", nargs="?", const="BENCH_sim.json",
+                        default=None, metavar="PATH",
+                        help="re-run the sim_engine rows and exit non-zero "
+                             "on >2x us_per_call regressions vs the given "
+                             "baseline JSON (default: BENCH_sim.json)")
     args = parser.parse_args()
+    if args.check is not None:
+        raise SystemExit(run_check(args.check))
     if args.json is not None and not args.json.endswith(".json"):
         parser.error(f"--json path {args.json!r} must end in .json "
                      f"(did you mean `run.py {args.json} --json`?)")

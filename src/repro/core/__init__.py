@@ -24,5 +24,8 @@ from repro.core.partitioner import (  # noqa: F401
     proportional_split,
 )
 from repro.core.skewed_hash import bucket_of, bucket_of_jnp, integer_capacities  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    JobSchedule, PullSpec, StageSummary, StaticSpec, plan_path, run_job,
+)
 from repro.core.planner import GrainPlanner, SlicePlan, WorkStealingQueue  # noqa: F401
 from repro.core.straggler import claim1_bound, detect_stragglers, verify_claim1  # noqa: F401

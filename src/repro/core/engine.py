@@ -16,23 +16,56 @@ for differential tests:
    only *that* datanode's readers have their remaining bytes checkpointed and
    their predicted finish re-pushed (stale heap entries are version-skipped).
 
-2. **Vectorized closed forms** (no event loop at all) for the dominant
-   special cases, auto-selected by :func:`simulate_stage`:
+2. **Closed forms** (no event loop at all) for the dominant special
+   cases, auto-selected by :func:`simulate_stage` via :func:`plan_path`.
+   With T tasks over n nodes the selection table is (first match wins):
 
-   * ``static`` assignment on constant-speed nodes with no effective I/O:
-     per-node ``cumsum`` of ``overhead + work/speed`` (HeMT macrotasks);
-   * ``pull`` with *uniform* tasks on constant-speed nodes with no effective
-     I/O (the HomT microtask sweep): each node's pull times form the
-     arithmetic grid ``j * (overhead_i + work/speed_i)``; the schedule is the
-     T smallest grid points (ties by node index), found with a vectorized
-     threshold search + ``np.lexsort`` — no per-task Python loop.
+   ====================================  =====================  ==============
+   input shape                           chosen path            complexity
+   ====================================  =====================  ==============
+   any multi-segment speed profile       ``event``              O(T log n)
+   static, const speeds, no eff. I/O     ``closed-static``      O(T) numpy
+   pull, uniform tasks, no eff. I/O,     ``closed-pull``        O(T) numpy
+   positive per-pull period
+   pull, heterogeneous tasks (or zero    ``closed-pull-hetero`` O(T log n)
+   period), no eff. I/O                                         tight merge
+   pull, equal ``io_mb`` > 0, single     ``closed-pull-io-sym`` O(T) numpy
+   datanode, network-governed rounds
+   anything else (flow-shared I/O)       ``event``              O(T log n)
+   ====================================  =====================  ==============
+
+   * ``closed-static``: per-node ``cumsum`` of ``overhead + work/speed``
+     (HeMT macrotasks);
+   * ``closed-pull``: each node's pull times form the arithmetic grid
+     ``j * (overhead_i + work/speed_i)``; the schedule is the T smallest
+     grid points (ties by node index), found with a vectorized threshold
+     search + ``np.lexsort``;
+   * ``closed-pull-hetero``: the merged-grid scan — each node's end times
+     are a prefix sum over its assigned works, and the FIFO queue hands task
+     k to the node owning the k-th smallest end event, so a single
+     ``heapreplace`` pass over the n per-node grid heads reproduces the
+     event calendar exactly with none of its per-event bookkeeping;
+   * ``closed-pull-io-sym``: every task reads the same ``io_mb`` from one
+     datanode and CPU never governs (``overhead + work/speed <= round I/O
+     time`` for every assignment), so the flow-sharing schedule is
+     piecewise linear: rounds of ``min(n, tasks left)`` co-readers that all
+     drain simultaneously after ``io_mb / (uplink_bw / readers)``.
 
    "No effective I/O" means ``uplink_bw`` is None/0 (infinite rate — I/O can
    never delay a completion) or no task has ``datanode >= 0`` with positive
-   ``io_mb``.  Anything else (multi-segment profiles, flow-shared I/O,
-   heterogeneous pull tasks) takes the event calendar, which reproduces the
+   ``io_mb``.  Anything else takes the event calendar, which reproduces the
    oracle's completion times to float round-off (differential tests pin both
    paths to ``_run_stage`` at 1e-9).
+
+3. **Whole jobs** (:func:`run_job`): an S-stage sequence of
+   :class:`PullSpec`/:class:`StaticSpec` stages separated by program
+   barriers.  On constant-speed clusters every stage schedule is
+   start-invariant, so each *distinct* spec is solved once (record-free
+   summaries — no ``TaskRecord`` objects) and repeated stages are O(n)
+   shifts of the cached per-node finish vector: an S-stage HomT/HeMT job
+   costs O(S·n) after the one-time per-spec solve instead of
+   O(S·T log n).  Non-constant clusters fall back to per-stage
+   ``simulate_stage`` at the true absolute start times.
 
 Tie semantics: the one deliberate divergence from the oracle is simultaneous
 I/O drains.  When two flows hit zero at the exact same instant, the legacy
@@ -49,6 +82,7 @@ from __future__ import annotations
 import heapq
 import math
 from collections import deque
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -278,6 +312,40 @@ def _io_active(tasks, uplink_bw: Optional[float]) -> bool:
     return any(t.datanode >= 0 and t.io_mb > _EPS for t in tasks)
 
 
+def _io_sym_spans_ok(oh: np.ndarray, sp: np.ndarray, work: np.ndarray,
+                     io_mb: float, uplink_bw: float, n: int) -> bool:
+    """Network-governed check for the symmetric co-reader closed form: task
+    k lands on node ``k % n`` in round ``k // n``; its CPU span must fit
+    inside that round's shared-drain time so every round stays a
+    simultaneous all-reader drain."""
+    n_tasks = len(work)
+    full_rounds, q = divmod(n_tasks, n)
+    idx = np.arange(n_tasks) % n
+    spans = oh[idx] + work / sp[idx]
+    durations = np.full(n_tasks, io_mb / (uplink_bw / n))
+    if q:
+        durations[full_rounds * n:] = io_mb / (uplink_bw / q)
+    return bool((spans <= durations).all())
+
+
+def _io_symmetric(nodes: Sequence[SimNode], speeds: Sequence[float],
+                  tasks: Sequence[SimTask], work: np.ndarray,
+                  uplink_bw: Optional[float]) -> bool:
+    """True if the stage qualifies for ``closed-pull-io-sym``: every task
+    reads the same positive ``io_mb`` from the same single datanode and CPU
+    never governs a completion (see :func:`_io_sym_spans_ok`)."""
+    if not uplink_bw:
+        return False
+    d0, m = tasks[0].datanode, tasks[0].io_mb
+    if d0 < 0 or m <= _EPS:
+        return False
+    if any(t.datanode != d0 or t.io_mb != m for t in tasks):
+        return False
+    oh = np.asarray([nd.task_overhead for nd in nodes])
+    return _io_sym_spans_ok(oh, np.asarray(speeds), work, m, uplink_bw,
+                            len(nodes))
+
+
 def _plan(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
           pull: bool, uplink_bw: Optional[float],
           ) -> Tuple[str, Optional[List[float]], Optional[np.ndarray]]:
@@ -287,17 +355,21 @@ def _plan(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
         return "event", None, None
     if pull:
         tasks = queues[0]
-        if not tasks or _io_active(tasks, uplink_bw):
+        if not tasks:
             return "event", speeds, None
         work = np.fromiter((t.cpu_work for t in tasks), np.float64,
                            count=len(tasks))
-        if not (work == work[0]).all():
+        if _io_active(tasks, uplink_bw):
+            if _io_symmetric(nodes, speeds, tasks, work, uplink_bw):
+                return "closed-pull-io-sym", speeds, work
             return "event", speeds, None
-        first = float(work[0])
-        if any(nd.task_overhead + first / s <= 0.0
-               for nd, s in zip(nodes, speeds)):
-            return "event", speeds, None    # zero-cost tasks: degenerate grid
-        return "closed-pull", speeds, work
+        if (work == work[0]).all():
+            first = float(work[0])
+            if all(nd.task_overhead + first / s > 0.0
+                   for nd, s in zip(nodes, speeds)):
+                return "closed-pull", speeds, work
+            # zero-cost tasks: degenerate grid — the merge scan handles it
+        return "closed-pull-hetero", speeds, work
     if any(_io_active(q, uplink_bw) for q in queues):
         return "event", speeds, None
     return "closed-static", speeds, None
@@ -305,8 +377,9 @@ def _plan(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
 
 def plan_path(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
               pull: bool, uplink_bw: Optional[float] = None) -> str:
-    """Which execution path ``simulate_stage`` will take:
-    'closed-pull' | 'closed-static' | 'event'."""
+    """Which execution path ``simulate_stage`` will take: 'closed-pull' |
+    'closed-pull-hetero' | 'closed-pull-io-sym' | 'closed-static' |
+    'event' (see the module-docstring selection table)."""
     return _plan(nodes, queues, pull, uplink_bw)[0]
 
 
@@ -335,16 +408,17 @@ def _closed_form_static(nodes: Sequence[SimNode], speeds: Sequence[float],
     return _stage_result([r for _, _, r in keyed], node_finish, start_time)
 
 
-def _closed_form_pull_uniform(nodes: Sequence[SimNode], speeds: Sequence[float],
-                              tasks: Sequence[SimTask], work: float,
-                              start_time: float) -> StageResult:
-    n, n_tasks = len(nodes), len(tasks)
-    periods = np.asarray([nd.task_overhead + work / s
-                          for nd, s in zip(nodes, speeds)])
-    # Node i is free to pull at grid times j * periods[i]; the schedule is the
-    # n_tasks smallest grid points, ties resolved by node index (the oracle's
-    # lowest-index scan).  Bisect a threshold so we only materialize ~n_tasks
-    # candidates before the lexsort.
+def _pull_uniform_grid(periods: np.ndarray, n_tasks: int,
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Solve the uniform-pull grid: node i is free to pull at grid times
+    ``j * periods[i]``; the schedule is the n_tasks smallest grid points,
+    ties resolved by node index (the oracle's lowest-index scan).  Bisect a
+    threshold so only ~n_tasks candidates are materialized before the
+    lexsort.  Returns ``(pull_node, pull_seq)``: the pulling node and its
+    per-node pull sequence number for each scheduled task.  Shared by the
+    record path and run_job's record-free summaries — one solver, one
+    tie-break."""
+    n = len(periods)
     lo, hi = 0.0, float(periods.min()) * (n_tasks + 1)
     for _ in range(64):
         mid = 0.5 * (lo + hi)
@@ -357,10 +431,17 @@ def _closed_form_pull_uniform(nodes: Sequence[SimNode], speeds: Sequence[float],
     seq = np.concatenate([np.arange(c) for c in per_node])
     times = seq * periods[node_idx]
     order = np.lexsort((node_idx, times))[:n_tasks]
+    return node_idx[order], seq[order]
 
-    pull_node = node_idx[order]
-    pull_seq = seq[order]
-    starts = start_time + times[order]
+
+def _closed_form_pull_uniform(nodes: Sequence[SimNode], speeds: Sequence[float],
+                              tasks: Sequence[SimTask], work: float,
+                              start_time: float) -> StageResult:
+    n, n_tasks = len(nodes), len(tasks)
+    periods = np.asarray([nd.task_overhead + work / s
+                          for nd, s in zip(nodes, speeds)])
+    pull_node, pull_seq = _pull_uniform_grid(periods, n_tasks)
+    starts = start_time + pull_seq * periods[pull_node]
     ends = start_time + (pull_seq + 1) * periods[pull_node]
     counts = np.bincount(pull_node, minlength=n)
 
@@ -377,6 +458,137 @@ def _closed_form_pull_uniform(nodes: Sequence[SimNode], speeds: Sequence[float],
     return _stage_result(records, node_finish, start_time)
 
 
+def _pull_hetero_heap(oh: Sequence[float], speeds: Sequence[float],
+                      works: Sequence[float], start_time: float,
+                      ) -> Tuple[List[Tuple[float, int]], List[int]]:
+    """Initial pulls of the merged-grid scan: node i takes task i at the
+    stage start; the heap keys ``(end, node)`` reproduce the event
+    calendar's lowest-index tie-break.  ``end = (free + overhead) +
+    work/speed`` is the exact arithmetic of the constant-speed
+    ``finish_time``, so end times match the event calendar bitwise."""
+    n_live = min(len(speeds), len(works))
+    cur_task = [-1] * len(speeds)
+    heap: List[Tuple[float, int]] = []
+    for i in range(n_live):
+        w = works[i]
+        e = start_time + oh[i]
+        if w > 0.0:
+            e += w / speeds[i]
+        heap.append((e, i))
+        cur_task[i] = i
+    heapq.heapify(heap)
+    return heap, cur_task
+
+
+def _pull_hetero_summary(oh: Sequence[float], speeds: Sequence[float],
+                         works: Sequence[float], start_time: float,
+                         ) -> Tuple[List[float], List[int]]:
+    """Record-free merged-grid scan: per-node (last finish, task count)
+    only — the whole-job (``run_job``) hot loop, with no per-task object
+    work at all."""
+    n, n_tasks = len(speeds), len(works)
+    heap, _ = _pull_hetero_heap(oh, speeds, works, start_time)
+    counts = [0] * n
+    for _, i in heap:
+        counts[i] = 1
+    replace = heapq.heapreplace
+    for w in works[min(n, n_tasks):]:
+        e0, i = heap[0]
+        e = e0 + oh[i]
+        if w > 0.0:
+            e += w / speeds[i]
+        counts[i] += 1
+        replace(heap, (e, i))
+    node_end = [start_time] * n
+    for e0, i in heap:
+        node_end[i] = e0
+    return node_end, counts
+
+
+def _closed_form_pull_hetero(nodes: Sequence[SimNode], speeds: Sequence[float],
+                             tasks: Sequence[SimTask], work: np.ndarray,
+                             start_time: float) -> StageResult:
+    """Full merged-grid scan (see module docstring): FIFO hands task k to
+    the owner of the k-th smallest end event; per-task (node, start, end)
+    are stored into flat lists and records are materialized once at the
+    end, in task order."""
+    n, n_tasks = len(nodes), len(tasks)
+    oh = [nd.task_overhead for nd in nodes]
+    works = work.tolist()
+    heap, cur_task = _pull_hetero_heap(oh, speeds, works, start_time)
+    node_of = list(range(min(n, n_tasks))) + [0] * (n_tasks - min(n, n_tasks))
+    start_of = [start_time] * n_tasks
+    end_of = [0.0] * n_tasks
+    replace = heapq.heapreplace
+    for k in range(min(n, n_tasks), n_tasks):
+        e0, i = heap[0]
+        end_of[cur_task[i]] = e0
+        w = works[k]
+        e = e0 + oh[i]
+        if w > 0.0:
+            e += w / speeds[i]
+        start_of[k] = e0
+        node_of[k] = i
+        cur_task[i] = k
+        replace(heap, (e, i))
+    node_end = [start_time] * n
+    while heap:
+        e0, i = heapq.heappop(heap)
+        end_of[cur_task[i]] = e0
+        node_end[i] = e0
+    names = [nd.name for nd in nodes]
+    records = list(map(TaskRecord, (t.task_id for t in tasks),
+                       (names[i] for i in node_of), start_of, end_of,
+                       (t.cpu_work for t in tasks)))
+    node_finish = {names[i]: node_end[i] for i in range(n)}
+    return _stage_result(records, node_finish, start_time)
+
+
+def _io_sym_schedule(n: int, n_tasks: int, io_mb: float, uplink_bw: float,
+                     start_time: float) -> Tuple[np.ndarray, np.ndarray,
+                                                 List[float], List[int]]:
+    """Round times for ``closed-pull-io-sym``: task k runs on node ``k % n``
+    in round ``k // n``; each round's co-readers all drain simultaneously
+    after ``io_mb / (uplink_bw / readers)``.  Returns per-task (starts,
+    ends) plus per-node (last finish, task count)."""
+    full_rounds, q = divmod(n_tasks, n)
+    full = io_mb / (uplink_bw / n)
+    ks = np.arange(n_tasks)
+    starts = start_time + (ks // n) * full
+    ends = starts + full
+    if q:
+        ends[full_rounds * n:] = (start_time + full_rounds * full
+                                  + io_mb / (uplink_bw / q))
+    node_end, counts = [], []
+    for i in range(n):
+        if q and i < q:
+            node_end.append(start_time + full_rounds * full
+                            + io_mb / (uplink_bw / q))
+            counts.append(full_rounds + 1)
+        elif full_rounds:
+            node_end.append(start_time + full_rounds * full)
+            counts.append(full_rounds)
+        else:
+            node_end.append(start_time)   # never ran
+            counts.append(0)
+    return starts, ends, node_end, counts
+
+
+def _closed_form_pull_io_sym(nodes: Sequence[SimNode],
+                             tasks: Sequence[SimTask], uplink_bw: float,
+                             start_time: float) -> StageResult:
+    n = len(nodes)
+    starts, ends, node_end, _ = _io_sym_schedule(
+        n, len(tasks), tasks[0].io_mb, uplink_bw, start_time)
+    names = [nd.name for nd in nodes]
+    starts_l, ends_l = starts.tolist(), ends.tolist()
+    records = [TaskRecord(t.task_id, names[k % n], starts_l[k], ends_l[k],
+                          t.cpu_work)
+               for k, t in enumerate(tasks)]
+    node_finish = {names[i]: node_end[i] for i in range(n)}
+    return _stage_result(records, node_finish, start_time)
+
+
 # --------------------------------------------------------------------------
 # entry point
 # --------------------------------------------------------------------------
@@ -389,6 +601,220 @@ def simulate_stage(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]]
     if path == "closed-pull":
         return _closed_form_pull_uniform(nodes, speeds, queues[0],
                                          float(work[0]), start_time)
+    if path == "closed-pull-hetero":
+        return _closed_form_pull_hetero(nodes, speeds, queues[0], work,
+                                        start_time)
+    if path == "closed-pull-io-sym":
+        return _closed_form_pull_io_sym(nodes, queues[0], uplink_bw,
+                                        start_time)
     if path == "closed-static":
         return _closed_form_static(nodes, speeds, queues, start_time)
     return run_stage_events(nodes, queues, pull, uplink_bw, start_time)
+
+
+# --------------------------------------------------------------------------
+# whole jobs: stage specs + barrier-carrying run_job
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PullSpec:
+    """One HomT stage: a shared FIFO queue that idle nodes pull from.
+
+    Either ``n_tasks`` uniform tasks of ``task_work`` each, or explicit
+    per-task ``works`` in queue order (coerced to a tuple so specs stay
+    hashable — equal specs share one cached solve inside ``run_job``).
+    Optional symmetric I/O: every task reads ``io_mb`` from ``datanode``.
+    """
+    n_tasks: int = 0
+    task_work: float = 0.0
+    works: Optional[Tuple[float, ...]] = None
+    io_mb: float = 0.0
+    datanode: int = -1
+
+    def __post_init__(self):
+        if self.works is not None:
+            object.__setattr__(self, "works",
+                               tuple(float(w) for w in self.works))
+
+    def work_array(self) -> np.ndarray:
+        if self.works is not None:
+            return np.asarray(self.works, np.float64)
+        return np.full(self.n_tasks, float(self.task_work))
+
+
+@dataclass(frozen=True)
+class StaticSpec:
+    """One HeMT stage: ``works[i]`` is node i's single macrotask.  Every
+    node runs exactly one task (zero-work macrotasks still pay the per-task
+    overhead and count as having run, matching ``run_static_stage`` with
+    one ``SimTask`` per node)."""
+    works: Tuple[float, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "works",
+                           tuple(float(w) for w in self.works))
+
+
+@dataclass
+class StageSummary:
+    """Record-free stage outcome (the whole-job analogue of StageResult)."""
+    start: float
+    completion: float
+    idle_time: float
+    node_finish: Dict[str, float]
+    counts: Dict[str, int]           # tasks completed per node
+
+    @property
+    def span(self) -> float:
+        return self.completion - self.start
+
+
+@dataclass
+class JobSchedule:
+    completion: float
+    stages: List[StageSummary]
+
+    @property
+    def makespan(self) -> float:
+        return self.completion
+
+
+def _rel_from_offsets(offs: List[float], counts: List[int],
+                      ) -> Tuple[float, float, List[float], List[int]]:
+    """(span, idle, offsets, counts) from per-node finish offsets; idle is
+    the finish spread over nodes that ran >= 1 task (Claim 1 metric)."""
+    ran = [o for o, c in zip(offs, counts) if c]
+    span = max(offs) if offs else 0.0
+    idle = (max(ran) - min(ran)) if ran else 0.0
+    return span, idle, offs, counts
+
+
+def _rel_summary_static(oh: Sequence[float], speeds: Sequence[float],
+                        spec: StaticSpec):
+    if len(spec.works) != len(speeds):
+        raise ValueError("StaticSpec needs one macrotask work per node")
+    offs = [o + w / s for o, w, s in zip(oh, spec.works, speeds)]
+    return _rel_from_offsets(offs, [1] * len(offs))
+
+
+def _rel_summary_pull_uniform(oh: Sequence[float], speeds: Sequence[float],
+                              n_tasks: int, work: float):
+    """Counts + finish offsets of the uniform grid, record-free: the same
+    ``_pull_uniform_grid`` solve as ``_closed_form_pull_uniform``, stopping
+    at the per-node ``bincount``."""
+    periods = np.asarray([o + work / s for o, s in zip(oh, speeds)])
+    pull_node, _ = _pull_uniform_grid(periods, n_tasks)
+    counts = np.bincount(pull_node, minlength=len(speeds))
+    offs = [float(c * p) if c else 0.0 for c, p in zip(counts, periods)]
+    return _rel_from_offsets(offs, counts.tolist())
+
+
+def _rel_summary_from_result(res: StageResult, names: Sequence[str],
+                             start: float):
+    counts = {nm: 0 for nm in names}
+    for r in res.records:
+        counts[r.node] += 1
+    offs = [res.node_finish[nm] - start for nm in names]
+    return _rel_from_offsets(offs, [counts[nm] for nm in names])
+
+
+def _spec_tasks(spec) -> Sequence[Sequence[SimTask]]:
+    """Materialize a spec into engine queues (the event-path fallback)."""
+    if isinstance(spec, StaticSpec):
+        return [[SimTask(w, task_id=i)] for i, w in enumerate(spec.works)]
+    return [[SimTask(float(w), spec.io_mb, spec.datanode, task_id=k)
+             for k, w in enumerate(spec.work_array())]]
+
+
+def _rel_summary(nodes: Sequence[SimNode], speeds: Sequence[float],
+                 spec, uplink_bw: Optional[float]):
+    """Solve one stage spec at relative start 0 on a constant-speed
+    cluster: (span, idle, per-node finish offsets, per-node counts)."""
+    oh = [nd.task_overhead for nd in nodes]
+    n = len(nodes)
+    if isinstance(spec, StaticSpec):
+        return _rel_summary_static(oh, speeds, spec)
+    works = spec.works
+    n_tasks = spec.n_tasks if works is None else len(works)
+    if n_tasks == 0:
+        return 0.0, 0.0, [0.0] * n, [0] * n
+    if uplink_bw and spec.io_mb > _EPS and spec.datanode >= 0:
+        if _io_sym_spans_ok(np.asarray(oh), np.asarray(speeds),
+                            spec.work_array(), spec.io_mb, uplink_bw, n):
+            _, _, node_end, counts = _io_sym_schedule(
+                n, n_tasks, spec.io_mb, uplink_bw, 0.0)
+            return _rel_from_offsets(node_end, counts)
+        res = run_stage_events(nodes, _spec_tasks(spec), pull=True,
+                               uplink_bw=uplink_bw)
+        return _rel_summary_from_result(res, [nd.name for nd in nodes], 0.0)
+    w0 = float(spec.task_work) if works is None else works[0]
+    uniform = works is None or all(w == w0 for w in works)
+    if uniform and all(o + w0 / s > 0.0 for o, s in zip(oh, speeds)):
+        return _rel_summary_pull_uniform(oh, speeds, n_tasks, w0)
+    if works is None:               # uniform but degenerate (zero period)
+        works = (w0,) * n_tasks
+    node_end, counts = _pull_hetero_summary(oh, speeds, works, 0.0)
+    return _rel_from_offsets(node_end, counts)
+
+
+def _abs_summary(nodes: Sequence[SimNode], spec, uplink_bw: Optional[float],
+                 start: float) -> StageSummary:
+    """Non-shiftable fallback (multi-segment profiles): run the stage at its
+    true absolute start through the auto-selecting engine."""
+    res = simulate_stage(nodes, _spec_tasks(spec),
+                         pull=not isinstance(spec, StaticSpec),
+                         uplink_bw=uplink_bw, start_time=start)
+    names = [nd.name for nd in nodes]
+    _, idle, offs, counts = _rel_summary_from_result(res, names, start)
+    return StageSummary(start, res.completion, idle,
+                        dict(res.node_finish),
+                        {nm: c for nm, c in zip(names, counts)})
+
+
+def run_job(nodes: Sequence[SimNode], stages: Sequence,
+            uplink_bw: Optional[float] = None,
+            start_time: float = 0.0) -> JobSchedule:
+    """Run a whole multi-stage job: each stage starts at the previous
+    stage's completion (program barrier).
+
+    ``stages`` is a sequence of :class:`PullSpec` / :class:`StaticSpec`.
+    On constant-speed clusters each *distinct* spec is solved once
+    (record-free) and every repetition is an O(n) shift of the cached
+    per-node finish vector, so S-stage HomT/HeMT sweeps cost O(S·n) after
+    the one-time per-spec solves.  Clusters with multi-segment speed
+    profiles are not start-invariant and fall back to per-stage
+    ``simulate_stage`` at the true barrier times.
+    """
+    speeds = _constant_speeds(nodes)
+    names = [nd.name for nd in nodes]
+    t = start_time
+    summaries: List[StageSummary] = []
+    # two-level cache: id() fast path for the common [spec] * S sharing one
+    # object, value-keyed fallback so distinct-but-equal specs still share
+    # a solve.  Hashing a works tuple is O(T) (Python does not memoize
+    # tuple hashes), so large-works specs are cached by id() only — a
+    # 10k-task spec would otherwise pay more for hashing than solving.
+    by_id: Dict[int, Tuple] = {}
+    by_val: Dict = {}
+    for spec in stages:
+        if speeds is None:
+            summ = _abs_summary(nodes, spec, uplink_bw, t)
+        else:
+            rel = by_id.get(id(spec))
+            if rel is None:
+                cheap_hash = not isinstance(spec, PullSpec) \
+                    or spec.works is None or len(spec.works) <= 1024
+                rel = by_val.get(spec) if cheap_hash else None
+                if rel is None:
+                    rel = _rel_summary(nodes, speeds, spec, uplink_bw)
+                    if cheap_hash:
+                        by_val[spec] = rel
+                by_id[id(spec)] = rel
+            span, idle, offs, counts = rel
+            summ = StageSummary(
+                t, t + span, idle,
+                {nm: t + o for nm, o in zip(names, offs)},
+                {nm: c for nm, c in zip(names, counts)})
+        summaries.append(summ)
+        t = summ.completion
+    return JobSchedule(t, summaries)

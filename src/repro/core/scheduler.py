@@ -9,7 +9,11 @@ feed observed (d_i, t_i) back into the AR(1) estimator.
 All schedulers simulate through ``run_pull_stage``/``run_static_stage`` and
 therefore ride the fast-path engine (``repro.core.engine``): the constant-
 speed stages every scheduler below emits take the vectorized closed forms,
-so job sweeps (Fig 7/8/13, multi-stage Fig 18) scale to large task counts.
+so job sweeps (Fig 7/8/13) scale to large task counts.  ``MultiStageJob``
+goes one further: it hands the whole stage sequence to ``engine.run_job``,
+which carries per-node finish vectors across the program barriers —
+an S-stage HomT/HeMT job costs O(S·n) instead of S separate engine entries
+materializing task records per stage.
 """
 from __future__ import annotations
 
@@ -159,26 +163,47 @@ class MultiStageJob:
     by either an even or a capacity-skewed partitioner (Algorithm 1)."""
     stage_works: List[float]
 
+    def specs(self, weights: Optional[Sequence[float]],
+              n_tasks_per_stage: Optional[int] = None) -> List:
+        """The job as engine stage specs: HomT (weights=None) -> one uniform
+        PullSpec per stage; HeMT -> one skewed StaticSpec per stage."""
+        from repro.core.engine import PullSpec, StaticSpec
+        if weights is None:
+            return [PullSpec(n_tasks=n_tasks_per_stage,
+                             task_work=w / n_tasks_per_stage)
+                    for w in self.stage_works]
+        norm = sum(weights)
+        return [StaticSpec(works=tuple(w * wi / norm for wi in weights))
+                for w in self.stage_works]
+
     def run(self, nodes: Sequence[SimNode], weights: Optional[Sequence[float]],
-            n_tasks_per_stage: Optional[int] = None) -> Tuple[float, List[StageResult]]:
+            n_tasks_per_stage: Optional[int] = None, records: bool = False,
+            ) -> Tuple[float, List]:
         """weights=None -> HomT with n_tasks_per_stage; else HeMT skewed.
 
-        Each stage restarts from the previous stage's completion (program
-        barrier); the per-stage uniform task lists keep every stage on the
-        engine's closed-form path for constant-speed clusters.
+        Thin wrapper over ``engine.run_job``: per-node finish vectors are
+        carried across the program barriers, so the whole S-stage sequence
+        costs O(S·n) on constant-speed clusters (record-free
+        ``StageSummary`` per stage).  ``records=True`` re-enters the engine
+        once per stage instead and returns full ``StageResult`` objects
+        with per-task records (the differential-test / debugging path).
         """
-        t, results = 0.0, []
-        norm = None if weights is None else sum(weights)
-        for w in self.stage_works:
-            if weights is None:
-                per = w / n_tasks_per_stage
-                tasks = [SimTask(per, task_id=i)
-                         for i in range(n_tasks_per_stage)]
-                res = run_pull_stage(nodes, tasks, start_time=t)
-            else:
-                assignments = [[SimTask(w * wi / norm, task_id=i)]
-                               for i, wi in enumerate(weights)]
-                res = run_static_stage(nodes, assignments, start_time=t)
-            results.append(res)
-            t = res.completion  # program barrier between stages
-        return t, results
+        if records:
+            t, results = 0.0, []
+            norm = None if weights is None else sum(weights)
+            for w in self.stage_works:
+                if weights is None:
+                    per = w / n_tasks_per_stage
+                    tasks = [SimTask(per, task_id=i)
+                             for i in range(n_tasks_per_stage)]
+                    res = run_pull_stage(nodes, tasks, start_time=t)
+                else:
+                    assignments = [[SimTask(w * wi / norm, task_id=i)]
+                                   for i, wi in enumerate(weights)]
+                    res = run_static_stage(nodes, assignments, start_time=t)
+                results.append(res)
+                t = res.completion  # program barrier between stages
+            return t, results
+        from repro.core.engine import run_job
+        sched = run_job(nodes, self.specs(weights, n_tasks_per_stage))
+        return sched.completion, sched.stages

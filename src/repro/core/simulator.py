@@ -18,14 +18,18 @@ speed-1.0 node), I/O sizes in MB, bandwidths in MB/s.
 ``run_pull_stage``/``run_static_stage`` dispatch to the layered fast-path
 engine in ``repro.core.engine`` (event calendar + vectorized closed forms);
 the ``_run_stage`` rescan loop below is retained as the reference oracle the
-engine's differential tests are pinned against.
+engine's differential tests are pinned against.  Whole multi-stage jobs
+(``run_job`` + ``PullSpec``/``StaticSpec``/``JobSchedule``/``StageSummary``,
+re-exported lazily below to avoid the import cycle) carry per-node finish
+vectors across program barriers so S-stage sweeps cost O(S·n) on
+constant-speed clusters.
 """
 from __future__ import annotations
 
 import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 from repro.core.capacity import BurstableNode
 
@@ -122,8 +126,10 @@ class SimTask:
     task_id: int = -1
 
 
-@dataclass(slots=True)
-class TaskRecord:
+class TaskRecord(NamedTuple):
+    # NamedTuple (C-level tuple construction) rather than a dataclass: the
+    # closed forms and the event calendar materialize one record per task,
+    # so construction cost is on every stage's critical path.
     task_id: int
     node: str
     start: float
@@ -306,6 +312,20 @@ def run_static_stage(nodes: Sequence[SimNode],
     from repro.core.engine import simulate_stage
     return simulate_stage(nodes, assignments, pull=False,
                           uplink_bw=uplink_bw, start_time=start_time)
+
+
+_ENGINE_EXPORTS = ("run_job", "PullSpec", "StaticSpec", "JobSchedule",
+                   "StageSummary", "plan_path")
+
+
+def __getattr__(name: str):
+    """Lazy re-export of the whole-job engine API (PEP 562): the engine
+    imports this module at top level, so a direct top-level import here
+    would be circular."""
+    if name in _ENGINE_EXPORTS:
+        from repro.core import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # --------------------------------------------------------------------------

@@ -71,3 +71,17 @@ class GrainSource:
     def load_many(self, grains: Sequence[Grain]) -> Iterator[Dict[str, np.ndarray]]:
         for g in grains:
             yield self.load(g)
+
+    def load_stacked(self, grains: Sequence[Grain]) -> Dict[str, np.ndarray]:
+        """A whole step's grains as [G, grain_batch, seq] arrays, filled
+        into the corpus's preallocated block buffers — the trainer's
+        one-dispatch-per-step path stacks nothing on the host.
+
+        The arrays are reused by the next same-shape call: transfer or copy
+        (e.g. ``jnp.asarray``) before loading the next step's block.
+        """
+        if any(g.size != self.grain_batch for g in grains):
+            raise ValueError("load_stacked needs uniform grain_batch grains")
+        starts = np.asarray([g.start for g in grains])
+        return self.corpus.batch_block(
+            starts[:, None] + np.arange(self.grain_batch))

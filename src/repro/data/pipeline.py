@@ -18,7 +18,7 @@ Design constraints (from the paper, adapted per DESIGN.md §2):
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -47,8 +47,12 @@ class SyntheticCorpus:
     seq_len: int
     seed: int = 0
     zipf_a: float = 1.2
+    # per-shape [G, B, seq] grain-block buffers for batch_block, lazily
+    # allocated and reused across steps (excluded from eq/hash)
+    _blocks: Dict[Tuple[int, int], Dict[str, np.ndarray]] = field(
+        default_factory=dict, init=False, repr=False, compare=False)
 
-    def sample(self, index: int) -> Dict[str, np.ndarray]:
+    def _tokens(self, index: int) -> np.ndarray:
         rng = np.random.default_rng(_fold_seed(self.seed, index))
         # zipf over [1, vocab): rejection-free via bounded zipf
         raw = rng.zipf(self.zipf_a, size=self.seq_len + 1)
@@ -58,12 +62,41 @@ class SyntheticCorpus:
         pos = rng.integers(0, max(1, self.seq_len - 8), size=4)
         for p in pos:
             toks[p:p + 8] = motif
+        return toks
+
+    def sample(self, index: int) -> Dict[str, np.ndarray]:
+        toks = self._tokens(index)
         return {"tokens": toks[:-1].astype(np.int32),
                 "labels": toks[1:].astype(np.int32)}
 
     def batch(self, indices: Sequence[int]) -> Dict[str, np.ndarray]:
         samples = [self.sample(i) for i in indices]
         return {k: np.stack([s[k] for s in samples]) for k in samples[0]}
+
+    def batch_block(self, indices: np.ndarray) -> Dict[str, np.ndarray]:
+        """A [G, B] index grid materialized as [G, B, seq] token/label
+        arrays, written in place into a preallocated per-shape buffer.
+
+        This is the grain fast path: a training step's whole grain block is
+        produced with zero intermediate per-sample dicts or ``np.stack``
+        copies.  The returned arrays are REUSED by the next ``batch_block``
+        call of the same shape — callers must transfer/copy (e.g.
+        ``jnp.asarray``) before requesting the next block.
+        """
+        indices = np.asarray(indices)
+        buf = self._blocks.get(indices.shape)
+        if buf is None:
+            shape = (*indices.shape, self.seq_len)
+            buf = {"tokens": np.empty(shape, np.int32),
+                   "labels": np.empty(shape, np.int32)}
+            self._blocks[indices.shape] = buf
+        tok, lab = buf["tokens"], buf["labels"]
+        for g in range(indices.shape[0]):
+            for b in range(indices.shape[1]):
+                toks = self._tokens(int(indices[g, b]))
+                tok[g, b] = toks[:-1]
+                lab[g, b] = toks[1:]
+        return buf
 
 
 def make_batch_specs(cfg, shape, *, dtype_tokens=np.int32) -> Dict[str, Tuple]:

@@ -12,15 +12,16 @@ Math is real JAX; executor timing comes from the calibrated simulator
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import PullSpec, StaticSpec, run_job
 from repro.core.partitioner import even_split, proportional_split
-from repro.core.simulator import SimNode, SimTask, run_pull_stage, run_static_stage
+from repro.core.simulator import SimNode
 
 
 def kmeans_reference(points: np.ndarray, k: int, iters: int, seed: int = 0,
@@ -77,23 +78,22 @@ class KMeansJob:
             return even_split(n, len(self.nodes))
         return even_split(n, self.n_tasks)
 
-    def _schedule(self, split: List[int]) -> Tuple[float, float, List[int]]:
-        tasks = [SimTask(c * self.work_per_point, task_id=i)
-                 for i, c in enumerate(split)]
-        # shift node profiles to current time (repetitive jobs back-to-back)
-        if self.mode == "homt":
-            res = run_pull_stage(self.nodes, tasks, start_time=self._t)
-        else:
-            res = run_static_stage(self.nodes, [[t] for t in tasks],
-                                   start_time=self._t)
-        return res.completion - self._t, res.idle_time, split
-
     # ------------------------------------------------------------------
     def run(self, iters: int) -> jnp.ndarray:
         pts = jnp.asarray(self.points)
         n, k = len(self.points), self.k
+        # the partition is mode-determined and data-independent, so every
+        # iteration is the same stage: one run_job call schedules the whole
+        # barrier sequence (repetitive jobs back-to-back)
+        split = self._partition()
+        if self.mode == "homt":
+            spec = PullSpec(works=tuple(c * self.work_per_point
+                                        for c in split))
+        else:
+            spec = StaticSpec(works=tuple(c * self.work_per_point
+                                          for c in split))
+        sched = run_job(self.nodes, [spec] * iters, start_time=self._t)
         for it in range(iters):
-            split = self._partition()
             # real math, partition-structured: per-partition partial sums
             bounds = np.cumsum([0] + list(split))
             sums = jnp.zeros((k, pts.shape[1]))
@@ -109,9 +109,10 @@ class KMeansJob:
             self.centroids = jnp.where(
                 cnts[:, None] > 0, sums / jnp.maximum(cnts, 1)[:, None],
                 self.centroids)
-            span, idle, split = self._schedule(split)
-            self._t += span
-            self.reports.append(IterationReport(it, span, idle, list(split)))
+            summ = sched.stages[it]
+            self.reports.append(IterationReport(it, summ.span, summ.idle_time,
+                                                list(split)))
+        self._t = sched.completion
         return self.centroids
 
     def total_time(self) -> float:

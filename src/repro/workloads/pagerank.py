@@ -23,8 +23,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import PullSpec, StaticSpec, run_job
 from repro.core.partitioner import even_split
-from repro.core.simulator import SimNode, SimTask, run_pull_stage, run_static_stage
+from repro.core.simulator import SimNode
 from repro.core.skewed_hash import bucket_of, integer_capacities
 
 
@@ -90,25 +91,27 @@ class PageRankJob:
         edge_owner = self.owner[self.src]
         edges_per_exec = np.bincount(edge_owner, minlength=ne)
 
+        # the vertex->bucket shuffle is fixed, so every iteration runs the
+        # same stage: hand the whole barrier sequence to run_job (one spec,
+        # solved once, O(nodes) per further iteration) instead of
+        # re-entering the engine per stage
+        if self.mode == "homt":
+            per = even_split(int(edges_per_exec.sum()), self.n_tasks)
+            spec = PullSpec(works=tuple(c * self.work_per_edge for c in per))
+        else:
+            spec = StaticSpec(works=tuple(c * self.work_per_edge
+                                          for c in edges_per_exec))
+        sched = run_job(self.nodes, [spec] * iters, start_time=self._t)
+        bucket_sizes = list(np.bincount(self.owner, minlength=ne))
+
         for it in range(iters):
             contrib = ranks[src] / out_deg[src]
             incoming = jax.ops.segment_sum(contrib, dst, n)
             ranks = (1 - self.d) / n + self.d * incoming
-
-            if self.mode == "homt":
-                per = even_split(int(edges_per_exec.sum()), self.n_tasks)
-                tasks = [SimTask(c * self.work_per_edge, task_id=i)
-                         for i, c in enumerate(per)]
-                res = run_pull_stage(self.nodes, tasks, start_time=self._t)
-            else:
-                tasks = [[SimTask(c * self.work_per_edge, task_id=i)]
-                         for i, c in enumerate(edges_per_exec)]
-                res = run_static_stage(self.nodes, tasks, start_time=self._t)
-            span = res.completion - self._t
-            self._t = res.completion
-            self.reports.append(StageReport(
-                it, span, res.idle_time,
-                list(np.bincount(self.owner, minlength=ne))))
+            summ = sched.stages[it]
+            self.reports.append(StageReport(it, summ.span, summ.idle_time,
+                                            list(bucket_sizes)))
+        self._t = sched.completion
         return np.asarray(ranks)
 
     def total_time(self) -> float:

@@ -1,0 +1,77 @@
+"""The benchmarks/run.py --check CI perf gate (ROADMAP item)."""
+import json
+
+import pytest
+
+from benchmarks.run import compare_rows, run_check
+
+
+def _row(name, us):
+    return {"name": name, "us_per_call": us, "derived": ""}
+
+
+BASE = [_row("sim_engine/pull_10000", 1000.0),
+        _row("sim_engine/job_pull_10x1000", 500.0),
+        _row("sim_engine/summary", 0.0)]         # derived-only: never gated
+
+
+def test_within_threshold_passes():
+    fresh = [_row("sim_engine/pull_10000", 1900.0),
+             _row("sim_engine/job_pull_10x1000", 400.0),
+             _row("sim_engine/summary", 0.0)]
+    assert compare_rows(BASE, fresh) == []
+
+
+def test_regression_flagged():
+    fresh = [_row("sim_engine/pull_10000", 2100.0),
+             _row("sim_engine/job_pull_10x1000", 400.0)]
+    msgs = compare_rows(BASE, fresh)
+    assert len(msgs) == 1
+    assert "pull_10000" in msgs[0]
+
+
+def test_missing_row_flagged_and_new_rows_ignored():
+    fresh = [_row("sim_engine/pull_10000", 900.0),
+             _row("sim_engine/brand_new_row", 1e9)]
+    msgs = compare_rows(BASE, fresh)
+    assert len(msgs) == 1
+    assert "job_pull_10x1000" in msgs[0] and "missing" in msgs[0]
+
+
+def test_derived_only_rows_never_gate():
+    fresh = [_row("sim_engine/pull_10000", 900.0),
+             _row("sim_engine/job_pull_10x1000", 490.0),
+             _row("sim_engine/summary", 1e9)]
+    assert compare_rows(BASE, fresh) == []
+
+
+def test_custom_threshold():
+    fresh = [_row("sim_engine/pull_10000", 1500.0),
+             _row("sim_engine/job_pull_10x1000", 500.0)]
+    assert compare_rows(BASE, fresh, threshold=2.0) == []
+    assert len(compare_rows(BASE, fresh, threshold=1.2)) == 1
+
+
+@pytest.mark.parametrize("fresh_us,expect", [(1500.0, 0), (2500.0, 1)])
+def test_run_check_exit_codes(tmp_path, capsys, fresh_us, expect):
+    baseline = tmp_path / "BENCH_sim.json"
+    baseline.write_text(json.dumps(
+        {"schema": 1, "sim": BASE, "kernels": [_row("kern/x", 1.0)]}))
+    fresh = [_row("sim_engine/pull_10000", fresh_us),
+             _row("sim_engine/job_pull_10x1000", 500.0)]
+    rc = run_check(str(baseline), fresh_rows=fresh)
+    assert rc == expect
+    err = capsys.readouterr().err
+    if expect:
+        assert "REGRESSION" in err
+    else:
+        assert "REGRESSION" not in err
+
+
+def test_run_check_missing_or_bad_baseline(tmp_path, capsys):
+    assert run_check(str(tmp_path / "nope.json"), fresh_rows=[]) == 1
+    assert "cannot read baseline" in capsys.readouterr().err
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert run_check(str(bad), fresh_rows=[]) == 1
+    assert "not valid JSON" in capsys.readouterr().err

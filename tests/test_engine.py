@@ -14,8 +14,10 @@ import pytest
 from hypothesis import given, strategies as st
 
 from repro.core.engine import (
-    ProfileCursor, plan_path, run_stage_events, simulate_stage,
+    ProfileCursor, PullSpec, StaticSpec, plan_path, run_job,
+    run_stage_events, simulate_stage,
 )
+from repro.core.scheduler import MultiStageJob
 from repro.core.simulator import (
     SimNode, SimTask, _run_stage, run_pull_stage, run_static_stage,
 )
@@ -168,6 +170,75 @@ def test_closed_form_static_matches_event_and_oracle(seed):
                          run_stage_events(nodes, queues, pull=False))
 
 
+@given(seed=st.integers(0, 10_000))
+def test_closed_form_pull_hetero_matches_event_and_oracle(seed):
+    """Heterogeneous task sizes on constant-speed clusters take the
+    merged-grid scan; it must match the oracle and the event calendar."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, max_nodes=5, constant=True)
+    tasks = random_tasks(rng, with_io=False)          # continuous draws
+    # guarantee >= 2 distinct sizes (a single task is trivially uniform)
+    tasks.append(SimTask(tasks[-1].cpu_work * 1.5 + 0.1,
+                         task_id=len(tasks)))
+    start = float(rng.uniform(0.0, 2.0))
+    assert plan_path(nodes, [tasks], pull=True) == "closed-pull-hetero"
+    oracle = _run_stage(nodes, [list(tasks)], pull=True, start_time=start)
+    assert_results_match(oracle,
+                         run_pull_stage(nodes, tasks, start_time=start))
+    assert_results_match(
+        oracle, run_stage_events(nodes, [tasks], pull=True, start_time=start))
+
+
+def _random_io_sym(rng, max_nodes=4):
+    """Symmetric co-reader stage guaranteed network-governed: CPU spans are
+    drawn well inside the smallest round's drain time."""
+    n = int(rng.integers(1, max_nodes + 1))
+    speeds = rng.uniform(0.2, 3.0, n)
+    io_mb = float(rng.uniform(10.0, 50.0))
+    bw = float(rng.uniform(5.0, 50.0))
+    n_tasks = int(rng.integers(1, 41))
+    q = n_tasks % n
+    d_min = (q if q else n) * io_mb / bw
+    nodes = [SimNode.constant(f"n{i}", float(s),
+                              float(rng.uniform(0.0, 0.1 * d_min)))
+             for i, s in enumerate(speeds)]
+    works = rng.uniform(0.0, 0.5 * d_min * speeds.min(), n_tasks)
+    tasks = [SimTask(float(w), io_mb=io_mb, datanode=0, task_id=i)
+             for i, w in enumerate(works)]
+    return nodes, tasks, bw
+
+
+@given(seed=st.integers(0, 10_000))
+def test_closed_form_io_sym_matches_event_path(seed):
+    """Symmetric co-reader rounds are all exact ties (where the legacy
+    oracle is unsound — see the module docstring's tie note), so the
+    closed form is pinned against the causal event calendar."""
+    rng = np.random.default_rng(seed)
+    nodes, tasks, bw = _random_io_sym(rng)
+    assert plan_path(nodes, [tasks], pull=True, uplink_bw=bw) \
+        == "closed-pull-io-sym"
+    event = run_stage_events(nodes, [tasks], pull=True, uplink_bw=bw)
+    assert_results_match(
+        event, simulate_stage(nodes, [tasks], pull=True, uplink_bw=bw))
+
+
+def test_io_sym_round_structure():
+    """2 co-readers x 100 MB/s shared uplink: rounds of n tasks drain
+    simultaneously every n*io_mb/bw seconds; a trailing partial round of q
+    readers drains after q*io_mb/bw."""
+    nodes = [SimNode.constant(f"n{i}", 1.0) for i in range(2)]
+    tasks = [SimTask(0.1, io_mb=100.0, datanode=0, task_id=i)
+             for i in range(5)]
+    res = run_pull_stage(nodes, tasks, uplink_bw=100.0)
+    ends = {r.task_id: r.end for r in res.records}
+    assert ends[0] == ends[1] == pytest.approx(2.0)
+    assert ends[2] == ends[3] == pytest.approx(4.0)
+    assert ends[4] == pytest.approx(5.0)          # lone reader at full rate
+    assert res.completion == pytest.approx(5.0)
+    assert_results_match(
+        run_stage_events(nodes, [tasks], pull=True, uplink_bw=100.0), res)
+
+
 def test_pull_tie_breaking_identical_nodes():
     """Equal-speed nodes produce exactly tied events; both paths must break
     ties like the oracle's lowest-index scan (task m -> node m mod n)."""
@@ -190,14 +261,34 @@ def test_path_selection_rules():
     ragged = [SimTask(1.0, task_id=0), SimTask(2.0, task_id=1)]
     io = [SimTask(1.0, io_mb=5.0, datanode=0, task_id=0)]
     assert plan_path(const, [uniform], pull=True) == "closed-pull"
-    assert plan_path(const, [ragged], pull=True) == "event"
+    assert plan_path(const, [ragged], pull=True) == "closed-pull-hetero"
     assert plan_path(multi, [uniform], pull=True) == "event"
+    assert plan_path(multi, [ragged], pull=True) == "event"
+    # cpu-governed I/O (cpu span 1.0 > io round 0.5) -> event calendar
     assert plan_path(const, [io], pull=True, uplink_bw=10.0) == "event"
     # infinite uplink can never delay a completion -> closed form stays on
     assert plan_path(const, [io], pull=True, uplink_bw=None) == "closed-pull"
     assert plan_path(const, [ragged], pull=False) == "closed-static"
     assert plan_path(multi, [ragged], pull=False) == "event"
     assert plan_path(const, [io], pull=False, uplink_bw=10.0) == "event"
+
+
+def test_path_selection_io_sym():
+    nodes = [SimNode.constant(f"n{i}", 1.0, 0.01) for i in range(2)]
+    sym = [SimTask(0.05, io_mb=10.0, datanode=0, task_id=i) for i in range(6)]
+    # network-governed (cpu span 0.06 <= round 2*10/10=2): closed form
+    assert plan_path(nodes, [sym], pull=True, uplink_bw=10.0) \
+        == "closed-pull-io-sym"
+    # cpu-governed round: event
+    heavy = [SimTask(5.0, io_mb=10.0, datanode=0, task_id=i) for i in range(6)]
+    assert plan_path(nodes, [heavy], pull=True, uplink_bw=10.0) == "event"
+    # different datanodes or unequal io_mb: event
+    mixed_dn = [SimTask(0.05, io_mb=10.0, datanode=i % 2, task_id=i)
+                for i in range(6)]
+    assert plan_path(nodes, [mixed_dn], pull=True, uplink_bw=10.0) == "event"
+    mixed_mb = [SimTask(0.05, io_mb=10.0 + i, datanode=0, task_id=i)
+                for i in range(6)]
+    assert plan_path(nodes, [mixed_mb], pull=True, uplink_bw=10.0) == "event"
 
 
 # --------------------------------------------------------------------------
@@ -347,3 +438,157 @@ def test_large_pull_sweep_smoke():
     # faster nodes take proportionally more microtasks
     assert counts["n0"] > counts["n2"] > 0
     assert res.idle_time <= max(0.01 + 100.0 / 10_000 / 0.4, 0.5)
+
+
+# --------------------------------------------------------------------------
+# whole-job engine (run_job) vs. per-stage event loop
+# --------------------------------------------------------------------------
+
+def _per_stage_event_baseline(nodes, specs, uplink_bw=None, start=0.0):
+    """Reference whole-job run: re-enter the event calendar once per stage,
+    carrying the barrier by hand. Returns per-stage StageResults."""
+    t, results = start, []
+    for spec in specs:
+        if isinstance(spec, StaticSpec):
+            queues = [[SimTask(w, task_id=i)]
+                      for i, w in enumerate(spec.works)]
+            res = run_stage_events(nodes, queues, pull=False,
+                                   uplink_bw=uplink_bw, start_time=t)
+        else:
+            works = spec.works if spec.works is not None \
+                else (spec.task_work,) * spec.n_tasks
+            tasks = [SimTask(float(w), spec.io_mb, spec.datanode, task_id=i)
+                     for i, w in enumerate(works)]
+            res = run_stage_events(nodes, [tasks], pull=True,
+                                   uplink_bw=uplink_bw, start_time=t)
+        results.append(res)
+        t = res.completion
+    return results
+
+
+def assert_job_matches(results, sched):
+    assert len(sched.stages) == len(results)
+    for res, summ in zip(results, sched.stages):
+        assert summ.completion == _approx(res.completion)
+        assert summ.idle_time == _approx(res.idle_time)
+        for name, tf in res.node_finish.items():
+            assert summ.node_finish[name] == _approx(tf)
+        counts = {name: 0 for name in res.node_finish}
+        for r in res.records:
+            counts[r.node] += 1
+        assert summ.counts == counts
+    if results:
+        assert sched.completion == _approx(results[-1].completion)
+
+
+def _random_specs(rng, n_nodes, n_stages):
+    specs = []
+    for _ in range(n_stages):
+        kind = rng.integers(0, 3)
+        if kind == 0:      # uniform pull
+            specs.append(PullSpec(n_tasks=int(rng.integers(1, 30)),
+                                  task_work=float(rng.uniform(0.05, 3.0))))
+        elif kind == 1:    # heterogeneous pull
+            works = rng.uniform(0.01, 3.0, int(rng.integers(1, 30)))
+            specs.append(PullSpec(works=tuple(float(w) for w in works)))
+        else:              # HeMT macrotasks
+            works = rng.uniform(0.0, 5.0, n_nodes)
+            specs.append(StaticSpec(works=tuple(float(w) for w in works)))
+    return specs
+
+
+@given(seed=st.integers(0, 10_000))
+def test_run_job_matches_per_stage_event_loop(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, max_nodes=4, constant=True)
+    specs = _random_specs(rng, len(nodes), int(rng.integers(1, 6)))
+    sched = run_job(nodes, specs)
+    assert_job_matches(_per_stage_event_baseline(nodes, specs), sched)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_run_job_repeated_specs_share_cached_solve(seed):
+    """[spec] * S (the Fig 17/18 shape) must shift one cached solve across
+    barriers and still match S independent engine entries."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, max_nodes=4, constant=True)
+    works = rng.uniform(0.01, 2.0, int(rng.integers(2, 25)))
+    spec = PullSpec(works=tuple(float(w) for w in works))
+    specs = [spec] * int(rng.integers(2, 8))
+    sched = run_job(nodes, specs)
+    assert_job_matches(_per_stage_event_baseline(nodes, specs), sched)
+
+
+def test_run_job_multisegment_cluster_falls_back_per_stage():
+    """Multi-segment profiles are not start-invariant: run_job must hit the
+    absolute per-stage path and still match the event calendar."""
+    nodes = [SimNode("a", [(0.0, 2.0), (5.0, 0.5)], 0.05),
+             SimNode("b", [(0.0, 1.0), (3.0, 2.0)], 0.1)]
+    specs = [PullSpec(n_tasks=7, task_work=1.3),
+             StaticSpec(works=(4.0, 2.0)),
+             PullSpec(works=(0.5, 2.5, 1.0, 0.25))]
+    sched = run_job(nodes, specs)
+    assert_job_matches(_per_stage_event_baseline(nodes, specs), sched)
+
+
+def test_run_job_io_specs():
+    nodes = [SimNode.constant(f"n{i}", 1.0, 0.01) for i in range(3)]
+    sym = PullSpec(n_tasks=8, task_work=0.05, io_mb=20.0, datanode=0)
+    # cpu-governed symmetric spec: run_job's internal event fallback
+    heavy = PullSpec(n_tasks=4, task_work=50.0, io_mb=20.0, datanode=0)
+    specs = [sym, heavy, sym]
+    sched = run_job(nodes, specs, uplink_bw=10.0)
+    assert_job_matches(
+        _per_stage_event_baseline(nodes, specs, uplink_bw=10.0), sched)
+
+
+def test_run_job_empty_and_start_time():
+    nodes = [SimNode.constant("a", 1.0)]
+    sched = run_job(nodes, [], start_time=3.0)
+    assert sched.completion == pytest.approx(3.0) and sched.stages == []
+    sched = run_job(nodes, [PullSpec(n_tasks=0), StaticSpec(works=(2.0,))],
+                    start_time=3.0)
+    assert sched.stages[0].completion == pytest.approx(3.0)
+    assert sched.completion == pytest.approx(5.0)
+
+
+# --------------------------------------------------------------------------
+# MultiStageJob rides run_job (satellite: randomized multi-stage pinning)
+# --------------------------------------------------------------------------
+
+@given(params=st.tuples(st.integers(0, 10_000), st.integers(1, 8)),
+       mode=st.sampled_from(["hemt", "homt"]))
+def test_multistage_job_pinned_to_event_loop(params, mode):
+    """MultiStageJob.run (via run_job) vs. the per-stage event loop on
+    heterogeneous-speed clusters with skewed shuffle weights."""
+    seed, n_stages = params
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 5))
+    nodes = [SimNode.constant(f"n{i}", float(rng.uniform(0.2, 3.0)),
+                              float(rng.uniform(0.0, 0.3)))
+             for i in range(n)]
+    stage_works = [float(rng.uniform(1.0, 30.0)) for _ in range(n_stages)]
+    job = MultiStageJob(stage_works=stage_works)
+    if mode == "homt":
+        k = int(rng.integers(1, 33))
+        total, summaries = job.run(nodes, None, n_tasks_per_stage=k)
+        specs = job.specs(None, k)
+    else:
+        weights = rng.uniform(0.1, 3.0, n)        # skewed shuffle shares
+        total, summaries = job.run(nodes, list(weights))
+        specs = job.specs(list(weights))
+    results = _per_stage_event_baseline(nodes, specs)
+    assert total == _approx(results[-1].completion)
+    assert_job_matches(results, type("S", (), {
+        "stages": summaries, "completion": total})())
+
+
+def test_multistage_records_mode_agrees():
+    nodes = [SimNode.constant("a", 1.0, 0.2), SimNode.constant("b", 0.4, 0.2)]
+    job = MultiStageJob(stage_works=[14.0] * 6)
+    fast, summaries = job.run(nodes, weights=[1.0, 0.4])
+    slow, results = job.run(nodes, weights=[1.0, 0.4], records=True)
+    assert fast == pytest.approx(slow, rel=REL)
+    for summ, res in zip(summaries, results):
+        assert summ.completion == _approx(res.completion)
+        assert res.records                        # full records retained

@@ -97,3 +97,35 @@ def test_feeder_contention_probabilities_match_model():
     fp = FeederPlacement(4, 8, replica=2)
     assert fp.expected_collision_prob(same_shard=True) == pytest.approx(0.5)
     assert fp.expected_collision_prob(same_shard=False) == pytest.approx(0.25)
+
+
+def test_batch_block_matches_batch_and_reuses_buffer():
+    """The grain fast path: batch_block fills a preallocated [G, B, seq]
+    buffer with exactly the samples batch() would stack, and reuses the
+    same buffer for same-shape requests (no per-step reallocation)."""
+    c = SyntheticCorpus(256, 8, seed=4)
+    idx = np.arange(12).reshape(3, 4)
+    block = c.batch_block(idx)
+    assert block["tokens"].shape == (3, 4, 8)
+    for g in range(3):
+        ref = c.batch(list(idx[g]))
+        assert (block["tokens"][g] == ref["tokens"]).all()
+        assert (block["labels"][g] == ref["labels"]).all()
+    again = c.batch_block(idx + 100)
+    assert again["tokens"] is block["tokens"]          # buffer reuse
+    other = c.batch_block(np.arange(8).reshape(2, 4))
+    assert other["tokens"] is not block["tokens"]      # per-shape buffers
+
+
+def test_load_stacked_matches_per_grain_loads():
+    from repro.data.grains import Grain, GrainSource
+    c = SyntheticCorpus(256, 8, seed=5)
+    src = GrainSource(c, grain_batch=4)
+    grains = [Grain(0, i * 4, 4) for i in range(3)]
+    stacked = src.load_stacked(grains)
+    for g_i, g in enumerate(grains):
+        ref = src.load(g)
+        assert (stacked["tokens"][g_i] == ref["tokens"]).all()
+        assert (stacked["labels"][g_i] == ref["labels"]).all()
+    with pytest.raises(ValueError):
+        src.load_stacked([Grain(0, 0, 3)])             # ragged grain
