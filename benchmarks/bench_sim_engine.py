@@ -16,7 +16,9 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import BenchRow, timed
-from repro.core.engine import PullSpec, StaticSpec, run_job, run_stage_events
+from repro.core.engine import (
+    PullSpec, StaticSpec, run_job, run_job_cache_clear, run_stage_events,
+)
 from repro.core.simulator import SimNode, SimTask, _run_stage, run_pull_stage
 
 SPEEDS = [1.0, 0.8, 0.5, 0.4]
@@ -34,8 +36,14 @@ def _tasks(n: int) -> List[SimTask]:
     return [SimTask(per, task_id=i) for i in range(n)]
 
 
-def _hetero_works(n: int, seed: int = 0) -> np.ndarray:
+def _hetero_works(n: int, seed: int = 0, blocks: int = 0) -> np.ndarray:
+    """Heterogeneous task sizes; ``blocks`` > 0 groups them into runs of
+    equal sizes (the Fig 18 skewed-shuffle shape: tasks of one partition
+    share a size), the regime the run-length batched merge targets."""
     rng = np.random.default_rng(seed)
+    if blocks:
+        return np.repeat((TOTAL_WORK / n) * rng.uniform(0.5, 1.5, blocks),
+                         n // blocks)
     return (TOTAL_WORK / n) * rng.uniform(0.5, 1.5, n)
 
 
@@ -63,20 +71,26 @@ def rows() -> List[BenchRow]:
         f"sim_engine/pull_io_{n}", us,
         f"tasks_per_s={n / (us / 1e6):.0f};completion={res.completion:.3f}"))
 
-    # heterogeneous task sizes (the Fig 18 skewed-shuffle regime): the
-    # merged-grid scan vs. the event calendar.  The headline row measures
-    # the record-free whole-job summary (what Fig 18-style sweeps consume);
-    # records_speedup is the full-records run_pull_stage comparison.
+    # heterogeneous task sizes (the Fig 18 skewed-shuffle regime: 32
+    # partitions, tasks within a partition share a size): the run-length
+    # batched merged-grid scan vs. the event calendar.  The headline row
+    # measures the record-free whole-job summary (what Fig 18-style sweeps
+    # consume); records_speedup is the full-records run_pull_stage
+    # comparison, heap_us the pure-heap scan on fully distinct sizes
+    # (run length 1, where the batched path declines).
     n = 10_000
-    hworks = _hetero_works(n)
+    hworks = _hetero_works(n, blocks=32)
     htasks = [SimTask(float(w), task_id=i) for i, w in enumerate(hworks)]
     hspec = PullSpec(works=tuple(float(w) for w in hworks))
+    dspec = PullSpec(works=tuple(float(w) for w in _hetero_works(n)))
     sched, us = timed(lambda: run_job(_nodes(), [hspec]), repeat=9)
+    _, us_heap = timed(lambda: run_job(_nodes(), [dspec]), repeat=5)
     _, us_rec = timed(run_pull_stage, nodes, htasks, repeat=5)
     _, us_evt = timed(run_stage_events, nodes, [htasks], True, repeat=5)
     out.append(BenchRow(
         f"sim_engine/pull_hetero_{n}", us,
         f"event_us={us_evt:.0f};speedup={us_evt / us:.1f}x;"
+        f"heap_us={us_heap:.0f};batch_speedup={us_heap / us:.1f}x;"
         f"records_speedup={us_evt / us_rec:.1f}x;"
         f"completion={sched.completion:.3f}"))
 
@@ -107,13 +121,24 @@ def rows() -> List[BenchRow]:
             t = run_stage_events(nds, [jtasks], True, None, t).completion
         return t
 
-    sched, us = timed(lambda: run_job(_nodes(), [jspec] * stages), repeat=5)
+    def _job_solve():
+        run_job_cache_clear()     # measure the solve, not the LRU hit
+        return run_job(_nodes(), [jspec] * stages)
+
+    sched, us = timed(_job_solve, repeat=5)
     t_evt, us_evt = timed(_job_events, repeat=3)
     assert abs(sched.completion - t_evt) < 1e-6 * t_evt
     out.append(BenchRow(
         f"sim_engine/job_pull_{stages}x{per_stage}", us,
         f"event_us={us_evt:.0f};speedup={us_evt / us:.1f}x;"
         f"completion={sched.completion:.3f}"))
+
+    # warm module-LRU path: repeated benchmark invocations / adaptive
+    # schedulers resolving the same (cluster, spec) job
+    _, us_lru = timed(lambda: run_job(_nodes(), [jspec] * stages), repeat=9)
+    out.append(BenchRow(
+        f"sim_engine/job_pull_lru_{stages}x{per_stage}", us_lru,
+        f"solve_us={us:.0f};lru_speedup={us / us_lru:.1f}x"))
 
     # HeMT macrotask job: 1000 static stages over 4 nodes
     stages = 1_000
@@ -126,7 +151,11 @@ def rows() -> List[BenchRow]:
             t = run_stage_events(nds, queues, False, None, t).completion
         return t
 
-    sched, us = timed(lambda: run_job(_nodes(), [sspec] * stages), repeat=5)
+    def _static_solve():
+        run_job_cache_clear()
+        return run_job(_nodes(), [sspec] * stages)
+
+    sched, us = timed(_static_solve, repeat=5)
     t_evt, us_evt = timed(_static_events, repeat=3)
     assert abs(sched.completion - t_evt) < 1e-6 * t_evt
     out.append(BenchRow(

@@ -1,0 +1,121 @@
+"""Straggler-mitigation sweep: HomT / HeMT / HeMT+speculation /
+HeMT+stealing completion times under stale estimates and burstable-credit
+exhaustion (paper §3 Claim 1, §5 OA-HeMT; ``repro.core.speculation``).
+
+Two scenarios, each comparing four policies on the same cluster:
+
+* **stale**: capacity estimates were learned before one node degraded to a
+  quarter speed, so the HeMT split is even.  Pure HeMT strands a quarter
+  of the job on the straggler; pure HomT re-balances but pays the
+  microtask overhead tax; HeMT with speculative copies or work stealing
+  keeps the macrotask overhead profile *and* rescues the straggler — the
+  paper's claim that learned-capacity HeMT plus cheap mitigation beats
+  both pure baselines.
+* **burstable**: token-bucket nodes split by peak rate; one node's credits
+  run out mid-macrotask (paper §6.2's stale-capacity failure mode) and its
+  tail crawls at the baseline rate until mitigation moves the work.
+
+``scenario_completions`` returns the raw completion times so the tier-1
+suite pins the orderings (HeMT+mitigation < HomT < HeMT-stale); the rows
+land in the ``speculation`` section of BENCH_sim.json via ``run.py
+--json``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import BenchRow, timed
+from repro.core.capacity import BurstableNode
+from repro.core.engine import (
+    PullSpec, StaticSpec, run_job, run_job_cache_clear,
+)
+from repro.core.simulator import SimNode
+from repro.core.speculation import (
+    ReskewHandoff, SpeculativeCopies, WorkStealing,
+)
+
+TOTAL_WORK = 16.0
+OVERHEAD = 0.3              # the tiny-tasks regime where HomT's tax bites
+N_MICRO = 64                # HomT microtask count
+STAGES = 4                  # stages per job (mitigation compounds)
+
+SPEC = SpeculativeCopies(quantile=0.75, factor=1.2, min_completed=1)
+STEAL = WorkStealing(grain=0.25)
+RESKEW = ReskewHandoff(cutoff_factor=1.5)
+
+
+def _stale_nodes() -> List[SimNode]:
+    """Estimates said [1, 1, 1, 1]; one node has since degraded to 0.25."""
+    return [SimNode.constant(f"n{i}", s, OVERHEAD)
+            for i, s in enumerate([1.0, 1.0, 1.0, 0.25])]
+
+
+def _burstable_nodes() -> List[SimNode]:
+    """Split by peak speed 1.0; n3's credits die mid-macrotask and it
+    drops to its 0.2 baseline."""
+    spec = [BurstableNode(credits=60.0, baseline=0.2),
+            BurstableNode(credits=60.0, baseline=0.2),
+            BurstableNode(credits=60.0, baseline=0.2),
+            BurstableNode(credits=2.0, baseline=0.2)]
+    return [SimNode.burstable(f"b{i}", bn, OVERHEAD)
+            for i, bn in enumerate(spec)]
+
+
+def _variants(believed_even_works) -> Dict[str, List]:
+    homt = PullSpec(n_tasks=N_MICRO, task_work=TOTAL_WORK / N_MICRO)
+    return {
+        "homt": [homt] * STAGES,
+        "hemt": [StaticSpec(works=believed_even_works)] * STAGES,
+        "hemt_spec": [StaticSpec(works=believed_even_works,
+                                 mitigation=SPEC)] * STAGES,
+        "hemt_steal": [StaticSpec(works=believed_even_works,
+                                  mitigation=STEAL)] * STAGES,
+        "hemt_reskew": [StaticSpec(works=believed_even_works,
+                                   mitigation=RESKEW)] * STAGES,
+    }
+
+
+def scenario_completions(scenario: str) -> Dict[str, float]:
+    """Completion time of the four-stage job per policy variant."""
+    nodes = _stale_nodes() if scenario == "stale" else _burstable_nodes()
+    even = (TOTAL_WORK / 4,) * 4
+    out = {}
+    for name, specs in _variants(even).items():
+        run_job_cache_clear()
+        out[name] = run_job(nodes, specs).completion
+    return out
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    for scenario in ("stale", "burstable"):
+        nodes_fn = _stale_nodes if scenario == "stale" else _burstable_nodes
+        even = (TOTAL_WORK / 4,) * 4
+        comps = {}
+        for name, specs in _variants(even).items():
+
+            def _solve(s=specs):
+                run_job_cache_clear()   # time the solve, not the LRU hit
+                return run_job(nodes_fn(), s)
+
+            sched, us = timed(_solve, repeat=5)
+            comps[name] = sched.completion
+            out.append(BenchRow(
+                f"speculation/{scenario}_{name}", us,
+                f"completion={sched.completion:.3f};stages={STAGES}"))
+        best_mitigated = min(comps["hemt_spec"], comps["hemt_steal"])
+        out.append(BenchRow(
+            f"speculation/{scenario}_ordering", 0.0,
+            f"mitigated_beats_homt={best_mitigated < comps['homt']};"
+            f"mitigated_beats_hemt={best_mitigated < comps['hemt']};"
+            f"best={min(comps, key=comps.get)}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -32,12 +32,14 @@ MODULES = [
     "benchmarks.bench_fig17_kmeans",
     "benchmarks.bench_fig18_pagerank",
     "benchmarks.bench_hemt_dp",
+    "benchmarks.bench_speculation",
     "benchmarks.bench_sim_engine",
     "benchmarks.bench_kernels",
 ]
 
 # modules whose rows land in the --json perf-trajectory file
 JSON_SECTIONS = {
+    "benchmarks.bench_speculation": "speculation",
     "benchmarks.bench_sim_engine": "sim",
     "benchmarks.bench_kernels": "kernels",
 }

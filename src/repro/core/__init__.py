@@ -7,6 +7,8 @@ Submodules:
   skewed_hash — Algorithm 1 skewed hash partitioner (§7)
   scheduler   — OA-HeMT / provisioned / burstable schedulers (§5-§6)
   straggler   — Claim 1 bound, detection, speculation, elastic re-skew
+  speculation — straggler-mitigation policies (speculative copies, work
+                stealing, barrier re-skew hand-off) for the engine
   hdfs_model  — Claim 2 storage-contention model (§3)
   simulator   — discrete-event cluster simulator (the paper's testbed)
   engine      — fast-path engine behind the simulator's stage runners
@@ -26,6 +28,10 @@ from repro.core.partitioner import (  # noqa: F401
 from repro.core.skewed_hash import bucket_of, bucket_of_jnp, integer_capacities  # noqa: F401
 from repro.core.engine import (  # noqa: F401
     JobSchedule, PullSpec, StageSummary, StaticSpec, plan_path, run_job,
+    run_job_cache_clear,
+)
+from repro.core.speculation import (  # noqa: F401
+    ReskewHandoff, SpeculativeCopies, WorkStealing,
 )
 from repro.core.planner import GrainPlanner, SlicePlan, WorkStealingQueue  # noqa: F401
 from repro.core.straggler import claim1_bound, detect_stragglers, verify_claim1  # noqa: F401

@@ -64,8 +64,29 @@ for differential tests:
    summaries — no ``TaskRecord`` objects) and repeated stages are O(n)
    shifts of the cached per-node finish vector: an S-stage HomT/HeMT job
    costs O(S·n) after the one-time per-spec solve instead of
-   O(S·T log n).  Non-constant clusters fall back to per-stage
-   ``simulate_stage`` at the true absolute start times.
+   O(S·T log n).  Solves are additionally shared *across* ``run_job``
+   calls through a module-level LRU keyed on (cluster signature,
+   uplink_bw, spec) — repeated benchmark invocations and the adaptive
+   schedulers reuse each other's solves (``run_job_cache_clear`` resets
+   it).  Non-constant clusters fall back to per-stage ``simulate_stage``
+   at the true absolute start times.
+
+4. **Straggler mitigation** (``repro.core.speculation``): the event
+   calendar accepts ``mitigation=`` — a :class:`SpeculativeCopies`
+   (quantile-triggered duplicate launch, first finisher wins, loser
+   cancelled) or :class:`WorkStealing` (idle node steals the remainder of
+   the most-backlogged attempt at a grain boundary) policy — adding task
+   cancel / re-launch / idle-recheck events on top of the completion
+   calendar.  ``PullSpec``/``StaticSpec`` carry a ``mitigation`` field so
+   ``run_job`` threads policies through whole jobs (mitigated stages are
+   solved on the event path; they stay start-invariant on constant-speed
+   clusters, so the solve caches still apply).  Barrier-level
+   :class:`ReskewHandoff` is applied by ``run_job`` itself: stragglers of
+   a static stage are cut at ``cutoff_factor * median`` finish and their
+   residual work is folded into the next stage's split.  Mitigated stages
+   must be CPU-governed (effective I/O raises ``ValueError``).  Exact
+   event semantics live in the ``speculation`` module docstring;
+   differential tests pin the engine against a naive per-event oracle.
 
 Tie semantics: the one deliberate divergence from the oracle is simultaneous
 I/O drains.  When two flows hit zero at the exact same instant, the legacy
@@ -81,7 +102,7 @@ from __future__ import annotations
 
 import heapq
 import math
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -89,6 +110,9 @@ import numpy as np
 
 from repro.core.simulator import (
     SimNode, SimTask, StageResult, TaskRecord, _stage_result,
+)
+from repro.core.speculation import (
+    ReskewHandoff, RunningAttempt, Speculate, fold_residual, is_event_policy,
 )
 
 _EPS = 1e-9
@@ -168,12 +192,25 @@ class ProfileCursor:
 
 def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
                      pull: bool, uplink_bw: Optional[float] = None,
-                     start_time: float = 0.0) -> StageResult:
+                     start_time: float = 0.0,
+                     mitigation=None) -> StageResult:
     """Event-calendar equivalent of the legacy ``_run_stage`` rescan loop.
 
     Semantics match the oracle: tasks pipeline I/O and CPU concurrently and
     complete when both are done; active readers of a datanode share
     ``uplink_bw`` equally; a falsy ``uplink_bw`` means infinite I/O rate.
+
+    ``mitigation`` is an event-level straggler policy
+    (:class:`~repro.core.speculation.SpeculativeCopies` or
+    :class:`~repro.core.speculation.WorkStealing`); it adds cancel,
+    re-launch, and idle-recheck events on top of the completion calendar.
+    Exact semantics (offer instants, fixpoint order, tie resolution, steal
+    granularity) are specified in the ``repro.core.speculation`` module
+    docstring and pinned by the differential oracle in
+    tests/test_speculation.py.  Mitigated stages must be CPU-governed: a
+    stage with effective I/O raises ``ValueError``.  A node whose only
+    attempts were cancelled produces no record and keeps its previous
+    ``node_finish`` (it completed nothing).
     """
     n = len(nodes)
     shared = deque(queues[0]) if pull else None
@@ -182,14 +219,28 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
     overheads = [nd.task_overhead for nd in nodes]
     bw = uplink_bw if uplink_bw else None   # falsy -> infinite rate -> no I/O
 
+    if mitigation is not None:
+        if not is_event_policy(mitigation):
+            raise ValueError(
+                f"{type(mitigation).__name__} is not an event-level policy "
+                "(barrier-level ReskewHandoff applies through run_job)")
+        if bw is not None and any(_io_active(q, bw) for q in queues):
+            raise ValueError("mitigation requires a CPU-governed stage "
+                             "(no effective I/O)")
+
     task: List[Optional[SimTask]] = [None] * n
     t_started = [0.0] * n
+    launch_at = [0.0] * n              # when the attempt's CPU work begins
+    attempt_work = [0.0] * n           # work of the current attempt
     cpu_done = [0.0] * n
     io_left = [0.0] * n
     io_rate = [0.0] * n
     io_at = [0.0] * n                  # last checkpoint time of io_left
     reading = [-1] * n                 # datanode being read, -1 = none
     version = [0] * n                  # invalidates superseded heap entries
+    twin = [-1] * n                    # node running the other copy, -1=none
+    copied: Set[int] = set()           # task_ids ever speculatively copied
+    done_durations: List[float] = []   # completed attempt durations
 
     readers: Dict[int, Set[int]] = {}  # datanode -> node indices mid-I/O
     heap: List[Tuple[float, int, int]] = []
@@ -236,6 +287,8 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
         launch = now + overheads[i]
         task[i] = tk
         t_started[i] = now
+        launch_at[i] = launch
+        attempt_work[i] = tk.cpu_work
         cpu_done[i] = cursors[i].finish_time(tk.cpu_work, launch)
         if bw is not None and tk.datanode >= 0 and tk.io_mb > _EPS:
             io_left[i] = tk.io_mb
@@ -248,12 +301,7 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
             io_left[i] = 0.0
             push(cpu_done[i], i)
 
-    def finish(i: int, now: float) -> None:
-        tk = task[i]
-        records.append(TaskRecord(tk.task_id, nodes[i].name,
-                                  t_started[i], now, tk.cpu_work))
-        node_finish[nodes[i].name] = now
-        task[i] = None
+    def refill(i: int, now: float) -> None:
         if pull:
             nxt = shared.popleft() if shared else None
         else:
@@ -261,16 +309,99 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
         if nxt is not None:
             start_task(i, nxt, now)
 
+    def finish(i: int, now: float) -> None:
+        tk = task[i]
+        records.append(TaskRecord(tk.task_id, nodes[i].name,
+                                  t_started[i], now, attempt_work[i]))
+        node_finish[nodes[i].name] = now
+        task[i] = None
+        loser = -1
+        if mitigation is not None:
+            done_durations.append(now - t_started[i])
+            loser = twin[i]
+            if loser >= 0:
+                # first finisher wins: cancel the racing copy (no record,
+                # no node_finish update — it completed nothing)
+                twin[i] = twin[loser] = -1
+                task[loser] = None
+                version[loser] += 1   # drop its pending completion event
+        refill(i, now)
+        if loser >= 0:
+            refill(loser, now)
+
+    def remaining_work(k: int, now: float) -> float:
+        """Work of node k's attempt not yet executed at ``now`` (full work
+        while still inside the overhead window)."""
+        if now < launch_at[k]:
+            return attempt_work[k]
+        return cursors[k].work_between(now, cpu_done[k])
+
+    def offer_mitigation(now: float) -> None:
+        """Fixpoint mitigation sweep (speculation-module semantics): offer
+        idle nodes in ascending index; restart after each accepted action;
+        schedule idle rechecks once no action is taken."""
+        while True:
+            running = [RunningAttempt(k, task[k].task_id, t_started[k],
+                                      attempt_work[k],
+                                      remaining_work(k, now),
+                                      task[k].task_id in copied)
+                       for k in range(n) if task[k] is not None]
+            if not running:
+                return
+            by_node = {r.node: r for r in running}
+            acted = False
+            for k in range(n):
+                if task[k] is not None:
+                    continue
+                if shared if pull else private[k]:
+                    continue          # not idle: work still queued
+                act = mitigation.offer(done_durations, running, now)
+                if act is None:
+                    continue
+                victim = by_node[act.victim]
+                vt = task[act.victim]
+                if isinstance(act, Speculate):
+                    # duplicate launch: full original work, from scratch
+                    copied.add(vt.task_id)
+                    start_task(k, SimTask(vt.cpu_work, task_id=vt.task_id),
+                               now)
+                    twin[k] = act.victim
+                    twin[act.victim] = k
+                else:                 # Steal: shrink the victim in place
+                    attempt_work[act.victim] -= act.amount
+                    t0 = max(now, launch_at[act.victim])
+                    cpu_done[act.victim] = cursors[act.victim].finish_time(
+                        victim.remaining - act.amount, t0)
+                    push(cpu_done[act.victim], act.victim)
+                    start_task(k, SimTask(act.amount, task_id=vt.task_id),
+                               now)
+                acted = True
+                break                 # state changed: restart the sweep
+            if not acted:
+                for k in range(n):
+                    if task[k] is not None or (shared if pull else private[k]):
+                        continue
+                    nc = mitigation.next_check(done_durations, running, now)
+                    if nc is not None:
+                        push(nc, k)   # idle recheck event
+                return
+
     for i in range(n):
         if pull:
             if shared:
                 start_task(i, shared.popleft(), start_time)
         elif private[i]:
             start_task(i, private[i].popleft(), start_time)
+    if mitigation is not None:
+        offer_mitigation(start_time)
 
     while heap:
         t, i, ver = heapq.heappop(heap)
-        if ver != version[i] or task[i] is None:
+        if ver != version[i]:
+            continue
+        if task[i] is None:
+            if mitigation is not None:
+                offer_mitigation(t)   # idle recheck
             continue
         if reading[i] >= 0:
             # predicted I/O completion for node i
@@ -285,6 +416,8 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
                 push(cpu_done[i], i)
         elif t + _EPS >= cpu_done[i]:
             finish(i, t)
+            if mitigation is not None:
+                offer_mitigation(t)
         else:
             push(cpu_done[i], i)
 
@@ -480,12 +613,102 @@ def _pull_hetero_heap(oh: Sequence[float], speeds: Sequence[float],
     return heap, cur_task
 
 
+_RUN_BATCH_MIN = 32     # mean run length below which the heap scan wins
+
+
+def _pull_hetero_try_batched(oh: Sequence[float], speeds: Sequence[float],
+                             works: Sequence[float], start_time: float,
+                             want_records: bool):
+    """Run-length batched merged-grid scan (ROADMAP item: numpy batching).
+
+    Real shuffle stages (Fig 18 skewed-hash buckets, even splits) enqueue
+    *runs* of equal-sized tasks.  Within such a run the merge is the
+    offset-uniform-grid problem: node i pulls at ``e_i + m * p_i`` with
+    period ``p_i = oh_i + w / s_i``, and the run's schedule is its R
+    lexicographically smallest ``(time, node)`` grid points — solved here
+    with ``np.lexsort`` over per-node candidate grids instead of R heap
+    steps, cutting the ~0.3 us/task pure-Python heap cost to amortized
+    numpy.  Tie semantics match the heap exactly: within a path identical
+    nodes generate bit-identical grids, and ``lexsort((node, time))``
+    reproduces the ``(end, node)`` heap key order.
+
+    Returns ``(node_end, counts, per_task)`` — ``per_task`` is
+    ``(node_of, start_of, end_of)`` numpy arrays when ``want_records`` —
+    or None when the input is a poor fit (short mean run length, or a
+    degenerate zero period somewhere) and the caller should take the heap
+    scan.
+    """
+    w_arr = np.asarray(works, np.float64)
+    n_tasks = len(w_arr)
+    n = len(speeds)
+    if n_tasks < 2 * _RUN_BATCH_MIN:
+        return None
+    change = np.flatnonzero(np.diff(w_arr) != 0.0) + 1
+    bounds = np.concatenate(([0], change, [n_tasks]))
+    n_runs = len(bounds) - 1
+    if n_runs * _RUN_BATCH_MIN > n_tasks:
+        return None                     # mostly distinct sizes: heap wins
+    oh_a = np.asarray(oh, np.float64)
+    sp = np.asarray(speeds, np.float64)
+    run_w = w_arr[bounds[:-1]]
+    periods = oh_a[None, :] + run_w[:, None] / sp[None, :]   # [runs, n]
+    if (periods <= 0.0).any():
+        return None                     # zero-period degenerate: heap scan
+    e = np.full(n, float(start_time))
+    counts = np.zeros(n, np.int64)
+    if want_records:
+        node_of = np.empty(n_tasks, np.int64)
+        start_of = np.empty(n_tasks, np.float64)
+        end_of = np.empty(n_tasks, np.float64)
+    arange_n = np.arange(n)
+    for r in range(n_runs):
+        k0, k1 = int(bounds[r]), int(bounds[r + 1])
+        big_r = k1 - k0
+        p = periods[r]
+        # candidate cap: the fluid pull time t0 solving
+        # sum_i((t0 - e_i)/p_i + 1) = R, plus one max period.  count(t) =
+        # sum_i max(0, floor((t - e_i)/p_i) + 1) satisfies count(t0) >=
+        # R - n and gains >= n per max(p), so count(cap) >= R: every one
+        # of the run's R merged pull points is <= cap.  +2 absorbs float
+        # rounding at the boundary (over-generation is harmless — lexsort
+        # keeps the R smallest — under-generation is not).
+        inv = 1.0 / p
+        t0 = (big_r - n + (e * inv).sum()) / inv.sum()
+        cap = t0 + p.max()
+        m = np.floor((cap - e) * inv).astype(np.int64) + 2
+        np.clip(m, 0, big_r, out=m)
+        if int(m.sum()) < big_r:      # fp paranoia: conservative re-cap
+            cap = (e + (big_r - 1) * p).min()
+            m = np.floor((cap - e) * inv).astype(np.int64) + 2
+            np.clip(m, 0, big_r, out=m)
+        node_idx = np.repeat(arange_n, m)
+        seq = np.concatenate([np.arange(c) for c in m])
+        times = e[node_idx] + seq * p[node_idx]
+        order = np.lexsort((node_idx, times))[:big_r]
+        sel = node_idx[order]
+        taken = np.bincount(sel, minlength=n)
+        if want_records:
+            node_of[k0:k1] = sel
+            pulls = times[order]
+            start_of[k0:k1] = pulls
+            end_of[k0:k1] = pulls + p[sel]
+        e = e + taken * p
+        counts += taken
+    node_end = np.where(counts > 0, e, start_time)
+    per_task = (node_of, start_of, end_of) if want_records else None
+    return node_end.tolist(), counts.tolist(), per_task
+
+
 def _pull_hetero_summary(oh: Sequence[float], speeds: Sequence[float],
                          works: Sequence[float], start_time: float,
                          ) -> Tuple[List[float], List[int]]:
     """Record-free merged-grid scan: per-node (last finish, task count)
     only — the whole-job (``run_job``) hot loop, with no per-task object
-    work at all."""
+    work at all.  Blocky work sequences (runs of equal sizes) take the
+    numpy run-length batched path."""
+    batched = _pull_hetero_try_batched(oh, speeds, works, start_time, False)
+    if batched is not None:
+        return batched[0], batched[1]
     n, n_tasks = len(speeds), len(works)
     heap, _ = _pull_hetero_heap(oh, speeds, works, start_time)
     counts = [0] * n
@@ -511,9 +734,20 @@ def _closed_form_pull_hetero(nodes: Sequence[SimNode], speeds: Sequence[float],
     """Full merged-grid scan (see module docstring): FIFO hands task k to
     the owner of the k-th smallest end event; per-task (node, start, end)
     are stored into flat lists and records are materialized once at the
-    end, in task order."""
+    end, in task order.  Blocky work sequences take the numpy run-length
+    batched path (``_pull_hetero_try_batched``)."""
     n, n_tasks = len(nodes), len(tasks)
     oh = [nd.task_overhead for nd in nodes]
+    batched = _pull_hetero_try_batched(oh, speeds, work, start_time, True)
+    if batched is not None:
+        node_end, _, (node_arr, start_arr, end_arr) = batched
+        names = [nd.name for nd in nodes]
+        records = list(map(TaskRecord, (t.task_id for t in tasks),
+                           (names[i] for i in node_arr.tolist()),
+                           start_arr.tolist(), end_arr.tolist(),
+                           (t.cpu_work for t in tasks)))
+        node_finish = {names[i]: node_end[i] for i in range(n)}
+        return _stage_result(records, node_finish, start_time)
     works = work.tolist()
     heap, cur_task = _pull_hetero_heap(oh, speeds, works, start_time)
     node_of = list(range(min(n, n_tasks))) + [0] * (n_tasks - min(n, n_tasks))
@@ -595,8 +829,17 @@ def _closed_form_pull_io_sym(nodes: Sequence[SimNode],
 
 def simulate_stage(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
                    pull: bool, uplink_bw: Optional[float] = None,
-                   start_time: float = 0.0) -> StageResult:
-    """Run one stage on the fastest applicable path (see module docstring)."""
+                   start_time: float = 0.0, mitigation=None) -> StageResult:
+    """Run one stage on the fastest applicable path (see module docstring).
+
+    ``mitigation`` must be an event-level policy (SpeculativeCopies /
+    WorkStealing); mitigated stages always take the event calendar — the
+    closed forms model no cancel/re-launch events.  Barrier-level policies
+    (ReskewHandoff) are applied by :func:`run_job`, not per stage.
+    """
+    if mitigation is not None:
+        return run_stage_events(nodes, queues, pull, uplink_bw, start_time,
+                                mitigation)   # validates the policy kind
     path, speeds, work = _plan(nodes, queues, pull, uplink_bw)
     if path == "closed-pull":
         return _closed_form_pull_uniform(nodes, speeds, queues[0],
@@ -624,17 +867,24 @@ class PullSpec:
     per-task ``works`` in queue order (coerced to a tuple so specs stay
     hashable — equal specs share one cached solve inside ``run_job``).
     Optional symmetric I/O: every task reads ``io_mb`` from ``datanode``.
+    ``mitigation`` is an event-level straggler policy from
+    ``repro.core.speculation`` (hashable frozen dataclass) applied while
+    the stage runs; pull stages reject barrier-level ReskewHandoff.
     """
     n_tasks: int = 0
     task_work: float = 0.0
     works: Optional[Tuple[float, ...]] = None
     io_mb: float = 0.0
     datanode: int = -1
+    mitigation: Optional[object] = None
 
     def __post_init__(self):
         if self.works is not None:
             object.__setattr__(self, "works",
                                tuple(float(w) for w in self.works))
+        if isinstance(self.mitigation, ReskewHandoff):
+            raise ValueError("ReskewHandoff is barrier-level and applies to "
+                             "StaticSpec stages only")
 
     def work_array(self) -> np.ndarray:
         if self.works is not None:
@@ -647,8 +897,12 @@ class StaticSpec:
     """One HeMT stage: ``works[i]`` is node i's single macrotask.  Every
     node runs exactly one task (zero-work macrotasks still pay the per-task
     overhead and count as having run, matching ``run_static_stage`` with
-    one ``SimTask`` per node)."""
+    one ``SimTask`` per node).  ``mitigation`` accepts event-level policies
+    (applied while the stage runs) or barrier-level ReskewHandoff (applied
+    by ``run_job`` at this stage's barrier: stragglers are cut and their
+    residual work folds into the next stage's split)."""
     works: Tuple[float, ...]
+    mitigation: Optional[object] = None
 
     def __post_init__(self):
         object.__setattr__(self, "works",
@@ -729,9 +983,18 @@ def _spec_tasks(spec) -> Sequence[Sequence[SimTask]]:
 def _rel_summary(nodes: Sequence[SimNode], speeds: Sequence[float],
                  spec, uplink_bw: Optional[float]):
     """Solve one stage spec at relative start 0 on a constant-speed
-    cluster: (span, idle, per-node finish offsets, per-node counts)."""
+    cluster: (span, idle, per-node finish offsets, per-node counts).
+    Stages with an event-level mitigation policy run the mitigated event
+    calendar (still start-invariant on constant speeds, so the solve stays
+    shiftable and cacheable)."""
     oh = [nd.task_overhead for nd in nodes]
     n = len(nodes)
+    if is_event_policy(spec.mitigation):
+        res = run_stage_events(nodes, _spec_tasks(spec),
+                               pull=not isinstance(spec, StaticSpec),
+                               uplink_bw=uplink_bw,
+                               mitigation=spec.mitigation)
+        return _rel_summary_from_result(res, [nd.name for nd in nodes], 0.0)
     if isinstance(spec, StaticSpec):
         return _rel_summary_static(oh, speeds, spec)
     works = spec.works
@@ -761,14 +1024,89 @@ def _abs_summary(nodes: Sequence[SimNode], spec, uplink_bw: Optional[float],
                  start: float) -> StageSummary:
     """Non-shiftable fallback (multi-segment profiles): run the stage at its
     true absolute start through the auto-selecting engine."""
+    mit = spec.mitigation if is_event_policy(spec.mitigation) else None
     res = simulate_stage(nodes, _spec_tasks(spec),
                          pull=not isinstance(spec, StaticSpec),
-                         uplink_bw=uplink_bw, start_time=start)
+                         uplink_bw=uplink_bw, start_time=start,
+                         mitigation=mit)
     names = [nd.name for nd in nodes]
     _, idle, offs, counts = _rel_summary_from_result(res, names, start)
     return StageSummary(start, res.completion, idle,
                         dict(res.node_finish),
                         {nm: c for nm, c in zip(names, counts)})
+
+
+# Module-level LRU sharing constant-speed solves across run_job calls
+# (ROADMAP item: repeated benchmark invocations and the adaptive
+# schedulers resolve identical (cluster, spec) stages over and over).
+_SOLVE_CACHE: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+_SOLVE_CACHE_MAX = 512
+
+
+def run_job_cache_clear() -> None:
+    """Drop the module-level (cluster signature, spec) solve cache."""
+    _SOLVE_CACHE.clear()
+
+
+def _cluster_signature(nodes: Sequence[SimNode]) -> Tuple:
+    """Hashable timing identity of a cluster: per-node (overhead, profile)
+    in node order.  Names are excluded — they label results but never
+    affect timing."""
+    return tuple((nd.task_overhead, tuple(nd.profile)) for nd in nodes)
+
+
+def _apply_reskew(nodes: Sequence[SimNode], spec: "StaticSpec",
+                  summ: StageSummary, names: Sequence[str],
+                  ) -> Tuple[StageSummary, float, List[float]]:
+    """Barrier-level re-skew hand-off (speculation-module semantics): cut
+    nodes still running past ``cutoff_factor * median`` of the per-node
+    finish offsets; return the clipped summary, the total residual
+    (unexecuted) work, and the observed per-node throughputs the fold is
+    proportional to."""
+    offs = [summ.node_finish[nm] - summ.start for nm in names]
+    ran = [o for nm, o in zip(names, offs) if summ.counts[nm]]
+    cutoff = spec.mitigation.cutoff(ran)
+    residual = 0.0
+    clipped: List[float] = []
+    executed: List[float] = []
+    for nd, off, w in zip(nodes, offs, spec.works):
+        if off > cutoff + _EPS:
+            r = min(nd.work_between(summ.start + cutoff, summ.start + off), w)
+            residual += r
+            clipped.append(cutoff)
+            executed.append(w - r)
+        else:
+            clipped.append(off)
+            executed.append(w)
+    if residual <= 0.0:
+        return summ, 0.0, []
+    throughputs = [x / c if c > 0.0 else 0.0
+                   for x, c in zip(executed, clipped)]
+    span, idle, offs2, _ = _rel_from_offsets(
+        clipped, [summ.counts[nm] for nm in names])
+    new = StageSummary(summ.start, summ.start + span, idle,
+                       {nm: summ.start + o for nm, o in zip(names, offs2)},
+                       dict(summ.counts))
+    return new, residual, throughputs
+
+
+def _fold_spec(spec, residual: float, throughputs: Sequence[float]):
+    """Fold residual work into the next stage's split: StaticSpec works
+    grow proportionally to observed throughput (``fold_residual``); a
+    PullSpec scales uniformly — its shared queue self-balances, so where
+    the residual lands is decided at run time anyway."""
+    if isinstance(spec, StaticSpec):
+        return StaticSpec(works=tuple(fold_residual(spec.works, residual,
+                                                    throughputs)),
+                          mitigation=spec.mitigation)
+    w = spec.work_array()
+    total = float(w.sum())
+    if total > 0.0:
+        scaled = tuple(float(x) for x in w * (1.0 + residual / total))
+    else:
+        scaled = tuple(float(x) + residual / len(w) for x in w)
+    return PullSpec(works=scaled, io_mb=spec.io_mb, datanode=spec.datanode,
+                    mitigation=spec.mitigation)
 
 
 def run_job(nodes: Sequence[SimNode], stages: Sequence,
@@ -781,22 +1119,39 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
     On constant-speed clusters each *distinct* spec is solved once
     (record-free) and every repetition is an O(n) shift of the cached
     per-node finish vector, so S-stage HomT/HeMT sweeps cost O(S·n) after
-    the one-time per-spec solves.  Clusters with multi-segment speed
-    profiles are not start-invariant and fall back to per-stage
-    ``simulate_stage`` at the true barrier times.
+    the one-time per-spec solves; solves are further shared across calls
+    via the module-level LRU (:func:`run_job_cache_clear` resets it).
+    Clusters with multi-segment speed profiles are not start-invariant and
+    fall back to per-stage ``simulate_stage`` at the true barrier times.
+
+    Stage specs carry their own ``mitigation`` policies: event-level ones
+    run inside the stage's solve; a StaticSpec with barrier-level
+    :class:`~repro.core.speculation.ReskewHandoff` is cut at its barrier
+    and the residual work is folded into the next stage's split (the last
+    stage is never cut — there is no later split to fold into; a cut-off
+    stage's residual skips empty stages until a foldable one appears).
     """
     speeds = _constant_speeds(nodes)
     names = [nd.name for nd in nodes]
     t = start_time
     summaries: List[StageSummary] = []
     # two-level cache: id() fast path for the common [spec] * S sharing one
-    # object, value-keyed fallback so distinct-but-equal specs still share
-    # a solve.  Hashing a works tuple is O(T) (Python does not memoize
-    # tuple hashes), so large-works specs are cached by id() only — a
-    # 10k-task spec would otherwise pay more for hashing than solving.
+    # object, module-level LRU keyed on (cluster signature, uplink, spec)
+    # so distinct-but-equal specs share a solve across run_job calls.
+    # Hashing a works tuple is O(T) (Python does not memoize tuple
+    # hashes), so large-works specs are cached by id() only — a 10k-task
+    # spec would otherwise pay more for hashing than solving.
     by_id: Dict[int, Tuple] = {}
-    by_val: Dict = {}
-    for spec in stages:
+    sig = _cluster_signature(nodes) if speeds is not None else None
+    stage_list = list(stages)
+    carry: Optional[Tuple[float, List[float]]] = None   # (residual, vhat)
+    folded_alive: List = []   # keeps folded temporaries alive: by_id keys
+    # are id()s, which CPython reuses once an object is collected
+    for k, spec in enumerate(stage_list):
+        if carry is not None and _spec_n_tasks(spec):
+            spec = _fold_spec(spec, carry[0], carry[1])
+            folded_alive.append(spec)
+            carry = None
         if speeds is None:
             summ = _abs_summary(nodes, spec, uplink_bw, t)
         else:
@@ -804,17 +1159,36 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
             if rel is None:
                 cheap_hash = not isinstance(spec, PullSpec) \
                     or spec.works is None or len(spec.works) <= 1024
-                rel = by_val.get(spec) if cheap_hash else None
-                if rel is None:
-                    rel = _rel_summary(nodes, speeds, spec, uplink_bw)
+                key = (sig, uplink_bw, spec) if cheap_hash else None
+                rel = _SOLVE_CACHE.get(key) if cheap_hash else None
+                if rel is not None:
+                    _SOLVE_CACHE.move_to_end(key)
+                else:
+                    span, idle, offs, counts = _rel_summary(
+                        nodes, speeds, spec, uplink_bw)
+                    rel = (span, idle, tuple(offs), tuple(counts))
                     if cheap_hash:
-                        by_val[spec] = rel
+                        _SOLVE_CACHE[key] = rel
+                        if len(_SOLVE_CACHE) > _SOLVE_CACHE_MAX:
+                            _SOLVE_CACHE.popitem(last=False)
                 by_id[id(spec)] = rel
             span, idle, offs, counts = rel
             summ = StageSummary(
                 t, t + span, idle,
                 {nm: t + o for nm, o in zip(names, offs)},
                 {nm: c for nm, c in zip(names, counts)})
+        if (isinstance(spec, StaticSpec)
+                and isinstance(spec.mitigation, ReskewHandoff)
+                and k + 1 < len(stage_list)):
+            summ, residual, vhat = _apply_reskew(nodes, spec, summ, names)
+            if residual > 0.0:
+                carry = (residual, vhat)
         summaries.append(summ)
         t = summ.completion
     return JobSchedule(t, summaries)
+
+
+def _spec_n_tasks(spec) -> int:
+    if isinstance(spec, StaticSpec):
+        return len(spec.works)
+    return spec.n_tasks if spec.works is None else len(spec.works)

@@ -43,14 +43,23 @@ class AdaptiveHeMTScheduler:
     """Oblivious-Adaptive HeMT (paper §5).
 
     First job: even split (the paper's k=1 rule). Afterwards d_i ~ v_i.
+
+    ``mitigation`` (an event-level policy from ``repro.core.speculation``,
+    e.g. WorkStealing/SpeculativeCopies) covers the window where estimates
+    are stale — the very first job's even split, and every job after an
+    un-observed capacity change — by letting idle executors rescue the
+    straggler instead of idling until the barrier (paper §5's OA-HeMT
+    discussion).  Speed observations then use *executed* work per node (a
+    stolen-from node must not be credited for work it handed off).
     """
 
     def __init__(self, executors: Sequence[str], alpha: float = 0.0,
-                 min_share: float = 0.0):
+                 min_share: float = 0.0, mitigation=None):
         # NB: the paper's Fig 7 experiment uses *zero* forgetting factor.
         self.executors = list(executors)
         self.estimator = ARSpeedEstimator(alpha=alpha)
         self.min_share = min_share
+        self.mitigation = mitigation
         self.history: List[JobResult] = []
 
     def plan(self, total_work: float) -> List[float]:
@@ -90,9 +99,36 @@ class AdaptiveHeMTScheduler:
             nodes = node_factory(k)
             split = self.plan(total_work)
             assignments = [[SimTask(w, task_id=i)] for i, w in enumerate(split)]
-            res = run_static_stage(nodes, assignments)
+            res = run_static_stage(nodes, assignments,
+                                   mitigation=self.mitigation)
             per_node_elapsed = [res.node_finish[nd.name] for nd in nodes]
-            self.record(k, split, per_node_elapsed, res)
+            if self.mitigation is not None:
+                # mitigation moves work between nodes: feed the estimator
+                # the work each node actually executed, not the plan
+                executed = {nd.name: 0.0 for nd in nodes}
+                win_end: Dict[int, float] = {}
+                for r in res.records:
+                    executed[r.node] += r.cpu_work
+                    win_end[r.task_id] = r.end
+                split_observed = [executed[nd.name] for nd in nodes]
+                for i, nd in enumerate(nodes):
+                    if split_observed[i] > 0.0 or split[i] <= 0.0:
+                        continue
+                    # a straggler whose only attempt was cancelled by a
+                    # winning speculative copy left no record — credit the
+                    # partial progress its executor would report (real
+                    # drivers see a killed attempt's progress counters),
+                    # else the estimator never observes the degraded speed
+                    # the mitigation exists to cover
+                    t_cancel = win_end.get(i)
+                    if t_cancel is not None and t_cancel > 0.0:
+                        split_observed[i] = min(
+                            split[i],
+                            nodes[i].work_between(nd.task_overhead, t_cancel))
+                        per_node_elapsed[i] = t_cancel
+            else:
+                split_observed = split
+            self.record(k, split_observed, per_node_elapsed, res)
         return self.history
 
 
@@ -164,21 +200,27 @@ class MultiStageJob:
     stage_works: List[float]
 
     def specs(self, weights: Optional[Sequence[float]],
-              n_tasks_per_stage: Optional[int] = None) -> List:
+              n_tasks_per_stage: Optional[int] = None,
+              mitigation=None) -> List:
         """The job as engine stage specs: HomT (weights=None) -> one uniform
-        PullSpec per stage; HeMT -> one skewed StaticSpec per stage."""
+        PullSpec per stage; HeMT -> one skewed StaticSpec per stage.
+        ``mitigation`` (a ``repro.core.speculation`` policy) rides every
+        stage spec — event-level policies run inside each stage,
+        ReskewHandoff folds straggler residuals across the barriers."""
         from repro.core.engine import PullSpec, StaticSpec
         if weights is None:
             return [PullSpec(n_tasks=n_tasks_per_stage,
-                             task_work=w / n_tasks_per_stage)
+                             task_work=w / n_tasks_per_stage,
+                             mitigation=mitigation)
                     for w in self.stage_works]
         norm = sum(weights)
-        return [StaticSpec(works=tuple(w * wi / norm for wi in weights))
+        return [StaticSpec(works=tuple(w * wi / norm for wi in weights),
+                           mitigation=mitigation)
                 for w in self.stage_works]
 
     def run(self, nodes: Sequence[SimNode], weights: Optional[Sequence[float]],
             n_tasks_per_stage: Optional[int] = None, records: bool = False,
-            ) -> Tuple[float, List]:
+            mitigation=None) -> Tuple[float, List]:
         """weights=None -> HomT with n_tasks_per_stage; else HeMT skewed.
 
         Thin wrapper over ``engine.run_job``: per-node finish vectors are
@@ -189,6 +231,13 @@ class MultiStageJob:
         with per-task records (the differential-test / debugging path).
         """
         if records:
+            from repro.core.speculation import ReskewHandoff
+            if isinstance(mitigation, ReskewHandoff):
+                raise ValueError(
+                    "records=True re-enters the engine per stage and cannot "
+                    "apply barrier-level ReskewHandoff; use records=False "
+                    "(run_job folds residuals across barriers) or an "
+                    "event-level policy")
             t, results = 0.0, []
             norm = None if weights is None else sum(weights)
             for w in self.stage_works:
@@ -196,14 +245,17 @@ class MultiStageJob:
                     per = w / n_tasks_per_stage
                     tasks = [SimTask(per, task_id=i)
                              for i in range(n_tasks_per_stage)]
-                    res = run_pull_stage(nodes, tasks, start_time=t)
+                    res = run_pull_stage(nodes, tasks, start_time=t,
+                                         mitigation=mitigation)
                 else:
                     assignments = [[SimTask(w * wi / norm, task_id=i)]
                                    for i, wi in enumerate(weights)]
-                    res = run_static_stage(nodes, assignments, start_time=t)
+                    res = run_static_stage(nodes, assignments, start_time=t,
+                                           mitigation=mitigation)
                 results.append(res)
                 t = res.completion  # program barrier between stages
             return t, results
         from repro.core.engine import run_job
-        sched = run_job(nodes, self.specs(weights, n_tasks_per_stage))
+        sched = run_job(nodes, self.specs(weights, n_tasks_per_stage,
+                                          mitigation=mitigation))
         return sched.completion, sched.stages

@@ -10,6 +10,13 @@ Runtime mitigation used by the training framework (runtime/ft.py):
     variation at program barriers" signal),
   * speculative re-execution for pull-mode stages,
   * HeMT re-skew (capacity loss absorbed by the next plan, no restart).
+
+Simulated, engine-backed mitigation lives in ``repro.core.speculation``:
+SpeculativeCopies / WorkStealing run on the event calendar
+(``run_stage_events(mitigation=...)``) and ReskewHandoff folds straggler
+residuals across ``run_job`` barriers.  The advisory helpers below
+(``speculative_copies``) share the SpeculativeCopies trigger rule, so the
+runtime monitor and the simulator speculate under one definition.
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.simulator import SimNode, SimTask, StageResult, run_pull_stage
+from repro.core.speculation import SpeculativeCopies
 
 
 def claim1_bound(total_work: float, n_tasks: int,
@@ -70,13 +78,21 @@ def speculative_copies(records_end: Dict[int, Optional[float]], now: float,
                        running_starts: Dict[int, float],
                        timeout_factor: float = 2.0) -> List[int]:
     """Opportunistic speculation (paper §8 survey, [45,6,5]): re-launch tasks
-    still running after timeout_factor x median completed duration."""
+    still running after timeout_factor x median completed duration.
+
+    Advisory twin of the engine-backed
+    :class:`repro.core.speculation.SpeculativeCopies` policy (median =
+    quantile 0.5, strict-excess trigger preserved from the original
+    helper); the simulated path runs the policy inside
+    ``run_stage_events(mitigation=...)`` with cancel/re-launch events.
+    """
     done = [e for e in records_end.values() if e is not None]
     if not done:
         return []
-    med = statistics.median(done)
-    return [tid for tid, st in running_starts.items()
-            if now - st > timeout_factor * med]
+    policy = SpeculativeCopies(quantile=0.5, factor=timeout_factor,
+                               min_completed=1)
+    thr = policy.threshold(done)
+    return [tid for tid, st in running_starts.items() if now - st > thr]
 
 
 def rebalance_after_loss(weights: Sequence[float], lost: Sequence[int],

@@ -8,7 +8,10 @@ exactly what the trainer's StepReports carry. `FleetMonitor` consumes them:
   * grain-rate z-score below threshold -> straggler -> *no restart*:
     HeMT absorbs the capacity loss by re-skewing the next plan (the paper's
     point); in HomT mode the work-stealing queue absorbs it per Claim 1.
-  * optional speculation for pull-mode stages (paper §8's [45, 6, 5]).
+  * optional speculation for pull-mode stages (paper §8's [45, 6, 5]),
+    driven by the same ``SpeculativeCopies`` trigger rule the simulated
+    engine applies (``repro.core.speculation``) — see
+    ``FleetMonitor.speculation_candidates``.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.speculation import SpeculativeCopies
 from repro.core.straggler import StragglerReport, detect_stragglers
 
 
@@ -37,12 +41,22 @@ class FleetEvent:
 
 
 class FleetMonitor:
-    """Tracks liveness + throughput of every slice from step heartbeats."""
+    """Tracks liveness + throughput of every slice from step heartbeats.
+
+    ``speculation`` (a :class:`~repro.core.speculation.SpeculativeCopies`
+    policy) configures the advisory re-launch rule used by
+    :meth:`speculation_candidates`; the same policy object can be handed to
+    the simulated engine (``run_stage_events(mitigation=...)``) so what the
+    monitor would re-launch is exactly what the simulation re-launches.
+    """
 
     def __init__(self, slices: Sequence[str], *, timeout: float = 3.0,
-                 z_threshold: float = -1.5):
+                 z_threshold: float = -1.5,
+                 speculation: Optional[SpeculativeCopies] = None):
         self.timeout = timeout
         self.z_threshold = z_threshold
+        self.speculation = speculation or SpeculativeCopies(
+            quantile=0.5, factor=2.0, min_completed=1)
         self.last_seen: Dict[str, float] = {s: 0.0 for s in slices}
         self.rates: Dict[str, float] = {}
         self.events: List[FleetEvent] = []
@@ -78,6 +92,17 @@ class FleetMonitor:
                 "straggler", name, now,
                 f"rate {s.rate:.2f} grains/s, z={s.zscore:.2f}"))
         return newly_dead, reports
+
+    def speculation_candidates(self, now: float,
+                               done_durations: Sequence[float],
+                               running_starts: Dict[str, float],
+                               ) -> List[str]:
+        """Tasks worth re-launching on an idle slice: running longer than
+        the policy threshold over completed durations (engine-shared
+        trigger; the paper's §8 opportunistic speculation)."""
+        pol = self.speculation
+        return [key for key, st in running_starts.items()
+                if pol.should_speculate(done_durations, now - st)]
 
     def alive(self) -> List[str]:
         return [n for n in self.last_seen if n not in self._dead]

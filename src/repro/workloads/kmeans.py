@@ -54,7 +54,7 @@ class KMeansJob:
     def __init__(self, points: np.ndarray, k: int, nodes: Sequence[SimNode],
                  *, mode: str = "hemt", weights: Optional[Sequence[float]] = None,
                  n_tasks: Optional[int] = None, seed: int = 0,
-                 work_per_point: float = 1e-4):
+                 work_per_point: float = 1e-4, mitigation=None):
         assert mode in ("hemt", "homt", "even")
         self.points = points
         self.k = k
@@ -63,6 +63,10 @@ class KMeansJob:
         self.weights = list(weights) if weights else None
         self.n_tasks = n_tasks or 4 * len(nodes)
         self.work_per_point = work_per_point
+        # straggler mitigation policy (repro.core.speculation) riding every
+        # iteration's stage spec — covers stale `weights` on a drifted
+        # cluster without changing the partition itself
+        self.mitigation = mitigation
         rng = np.random.default_rng(seed)
         self.centroids = jnp.asarray(
             points[rng.choice(len(points), k, replace=False)])
@@ -88,10 +92,12 @@ class KMeansJob:
         split = self._partition()
         if self.mode == "homt":
             spec = PullSpec(works=tuple(c * self.work_per_point
-                                        for c in split))
+                                        for c in split),
+                            mitigation=self.mitigation)
         else:
             spec = StaticSpec(works=tuple(c * self.work_per_point
-                                          for c in split))
+                                          for c in split),
+                              mitigation=self.mitigation)
         sched = run_job(self.nodes, [spec] * iters, start_time=self._t)
         for it in range(iters):
             # real math, partition-structured: per-partition partial sums

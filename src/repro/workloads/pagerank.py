@@ -57,7 +57,7 @@ class PageRankJob:
                  nodes: Sequence[SimNode], *, mode: str = "hemt",
                  weights: Optional[Sequence[float]] = None,
                  n_tasks: Optional[int] = None, d: float = 0.85,
-                 work_per_edge: float = 2e-5):
+                 work_per_edge: float = 2e-5, mitigation=None):
         assert mode in ("hemt", "homt", "even")
         self.src, self.dst, self.n = src, dst, n
         self.nodes = list(nodes)
@@ -65,6 +65,10 @@ class PageRankJob:
         self.d = d
         self.work_per_edge = work_per_edge
         self.n_tasks = n_tasks or 4 * len(nodes)
+        # straggler mitigation policy (repro.core.speculation) riding every
+        # iteration's stage spec — rescues a skewed-hash bucket stranded on
+        # a node whose capacity drifted since the weights were learned
+        self.mitigation = mitigation
         ne = len(nodes)
         if mode == "hemt":
             caps = integer_capacities(weights, resolution=1 << 12)
@@ -97,10 +101,12 @@ class PageRankJob:
         # re-entering the engine per stage
         if self.mode == "homt":
             per = even_split(int(edges_per_exec.sum()), self.n_tasks)
-            spec = PullSpec(works=tuple(c * self.work_per_edge for c in per))
+            spec = PullSpec(works=tuple(c * self.work_per_edge for c in per),
+                            mitigation=self.mitigation)
         else:
             spec = StaticSpec(works=tuple(c * self.work_per_edge
-                                          for c in edges_per_exec))
+                                          for c in edges_per_exec),
+                              mitigation=self.mitigation)
         sched = run_job(self.nodes, [spec] * iters, start_time=self._t)
         bucket_sizes = list(np.bincount(self.owner, minlength=ne))
 

@@ -1,5 +1,6 @@
 """The benchmarks/run.py --check CI perf gate (ROADMAP item)."""
 import json
+import os
 
 import pytest
 
@@ -75,3 +76,16 @@ def test_run_check_missing_or_bad_baseline(tmp_path, capsys):
     bad.write_text("{not json")
     assert run_check(str(bad), fresh_rows=[]) == 1
     assert "not valid JSON" in capsys.readouterr().err
+
+
+def test_committed_baseline_gate(capsys):
+    """ROADMAP item 5: tier-1 pytest exercises the --check gate on the
+    committed BENCH_sim.json — the sim_engine rows re-run live and must
+    sit within threshold of the repo baseline.  4x (vs. the CLI's 2x
+    default) leaves headroom for loaded CI machines; a genuine fast-path
+    regression (the gated rows are 5-80x off their event-path fallbacks)
+    still trips it."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baseline = os.path.join(repo_root, "BENCH_sim.json")
+    assert run_check(baseline, threshold=4.0) == 0
+    assert "OK" in capsys.readouterr().out

@@ -592,3 +592,140 @@ def test_multistage_records_mode_agrees():
     for summ, res in zip(summaries, results):
         assert summ.completion == _approx(res.completion)
         assert res.records                        # full records retained
+
+
+# --------------------------------------------------------------------------
+# module-level run_job solve LRU (satellite: cross-call sharing)
+# --------------------------------------------------------------------------
+
+def test_run_job_solve_cache_shared_across_calls(monkeypatch):
+    from repro.core import engine
+
+    engine.run_job_cache_clear()
+    calls = []
+    real = engine._rel_summary
+
+    def counting(nodes, speeds, spec, uplink_bw):
+        calls.append(spec)
+        return real(nodes, speeds, spec, uplink_bw)
+
+    monkeypatch.setattr(engine, "_rel_summary", counting)
+    nodes = [SimNode.constant(f"n{i}", s, 0.01)
+             for i, s in enumerate([1.0, 0.5])]
+    specs = [PullSpec(n_tasks=10, task_work=0.3),
+             StaticSpec(works=(2.0, 1.0))]
+    first = run_job(nodes, specs)
+    assert len(calls) == 2
+    # same cluster, distinct-but-equal specs: served from the module LRU
+    again = run_job(nodes, [PullSpec(n_tasks=10, task_work=0.3),
+                            StaticSpec(works=(2.0, 1.0))])
+    assert len(calls) == 2
+    assert again.completion == pytest.approx(first.completion, rel=REL)
+    # equal profiles under different names share the solve (names only
+    # label results); a different overhead is a different cluster
+    renamed = [SimNode.constant(f"m{i}", s, 0.01)
+               for i, s in enumerate([1.0, 0.5])]
+    res = run_job(renamed, [PullSpec(n_tasks=10, task_work=0.3)])
+    assert len(calls) == 2
+    assert set(res.stages[0].node_finish) == {"m0", "m1"}
+    assert res.completion == pytest.approx(first.stages[0].completion,
+                                           rel=REL)
+    other = [SimNode.constant(f"n{i}", s, 0.02)
+             for i, s in enumerate([1.0, 0.5])]
+    run_job(other, [PullSpec(n_tasks=10, task_work=0.3)])
+    assert len(calls) == 3
+    # large-works specs stay un-hashed (id-cache only): a fresh equal spec
+    # re-solves, repeated stages of one object still share
+    big = PullSpec(works=tuple(0.1 + (i % 7) * 0.01 for i in range(2000)))
+    run_job(nodes, [big] * 3)
+    assert len(calls) == 4
+    run_job(nodes, [PullSpec(works=big.works)])
+    assert len(calls) == 5
+    engine.run_job_cache_clear()
+
+
+def test_run_job_cache_eviction_bounded(monkeypatch):
+    from repro.core import engine
+
+    engine.run_job_cache_clear()
+    monkeypatch.setattr(engine, "_SOLVE_CACHE_MAX", 4)
+    nodes = [SimNode.constant("a", 1.0)]
+    for k in range(10):
+        run_job(nodes, [StaticSpec(works=(float(k + 1),))])
+    assert len(engine._SOLVE_CACHE) == 4
+    engine.run_job_cache_clear()
+    assert len(engine._SOLVE_CACHE) == 0
+
+
+# --------------------------------------------------------------------------
+# run-length batched hetero pull (satellite: numpy merged-grid batching)
+# --------------------------------------------------------------------------
+
+def _blocky_works(rng, n_blocks=None, lo=40, hi=120):
+    """Fig 18-style shuffle queue: runs of equal-sized tasks."""
+    n_blocks = n_blocks or int(rng.integers(2, 7))
+    lens = rng.integers(lo, hi, n_blocks)
+    vals = rng.uniform(0.05, 2.0, n_blocks)
+    return np.repeat(vals, lens)
+
+
+def test_pull_hetero_batched_engages_on_blocky_works():
+    from repro.core.engine import _pull_hetero_try_batched
+
+    rng = np.random.default_rng(0)
+    blocky = _blocky_works(rng)
+    got = _pull_hetero_try_batched([0.01, 0.02], [1.0, 0.5], blocky, 0.0,
+                                   False)
+    assert got is not None
+    node_end, counts, per_task = got
+    assert per_task is None and sum(counts) == len(blocky)
+    # continuous draws (run length 1) and degenerate zero periods decline
+    distinct = rng.uniform(0.1, 2.0, 200)
+    assert _pull_hetero_try_batched([0.01, 0.02], [1.0, 0.5], distinct,
+                                    0.0, False) is None
+    zeros = np.zeros(200)
+    assert _pull_hetero_try_batched([0.0, 0.1], [1.0, 0.5], zeros,
+                                    0.0, False) is None
+
+
+@given(seed=st.integers(0, 10_000))
+def test_pull_hetero_batched_matches_oracle(seed):
+    """Blocky queues through the full stack (records + summary paths) must
+    match the legacy rescan oracle and the event calendar at 1e-9."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, max_nodes=5, constant=True)
+    works = _blocky_works(rng, n_blocks=int(rng.integers(2, 5)),
+                          lo=33, hi=70)
+    tasks = [SimTask(float(w), task_id=i) for i, w in enumerate(works)]
+    start = float(rng.uniform(0.0, 2.0))
+    assert plan_path(nodes, [tasks], pull=True) == "closed-pull-hetero"
+    oracle = _run_stage(nodes, [list(tasks)], pull=True, start_time=start)
+    assert_results_match(oracle,
+                         run_pull_stage(nodes, tasks, start_time=start))
+    # record-free summary (the run_job hot loop) agrees too
+    from repro.core import engine
+
+    engine.run_job_cache_clear()
+    sched = run_job(nodes, [PullSpec(works=tuple(float(w) for w in works))],
+                    start_time=start)
+    summ = sched.stages[0]
+    assert summ.completion == _approx(oracle.completion)
+    for nd in nodes:
+        assert summ.node_finish[nd.name] == _approx(
+            oracle.node_finish[nd.name])
+    counts = {nd.name: 0 for nd in nodes}
+    for r in oracle.records:
+        counts[r.node] += 1
+    assert summ.counts == counts
+
+
+def test_pull_hetero_batched_identical_nodes_tie_break():
+    """Exact cross-node grid ties (identical nodes, equal-size runs) must
+    keep the heap's lowest-index round-robin order."""
+    nodes = [SimNode.constant(f"n{i}", 1.0, 0.1) for i in range(3)]
+    works = np.concatenate([np.full(60, 0.5), np.full(45, 1.25)])
+    tasks = [SimTask(float(w), task_id=i) for i, w in enumerate(works)]
+    oracle = _run_stage(nodes, [list(tasks)], pull=True)
+    assert_results_match(oracle, run_pull_stage(nodes, tasks))
+    assert_results_match(oracle,
+                         run_stage_events(nodes, [tasks], pull=True))
