@@ -7,7 +7,7 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import BenchRow, timed
-from repro.core.straggler import claim1_bound, verify_claim1
+from repro.core.straggler import verify_claim1
 
 
 def rows() -> List[BenchRow]:

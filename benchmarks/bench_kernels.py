@@ -10,7 +10,6 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import BenchRow, timed
 from repro.kernels import ops, ref

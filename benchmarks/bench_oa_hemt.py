@@ -1,0 +1,202 @@
+"""Online-adaptive HeMT under AR(1)-drifting node speeds (paper §5).
+
+The paper's complete OA-HeMT story: capacity estimates are learned across
+program barriers and every stage's split is re-planned from them
+(``engine.run_job(adaptive=AdaptivePlan(...))``).  This benchmark puts the
+loop in the regime where adaptivity pays — node speeds *drift* while the
+job runs, so any static split goes stale — and reproduces the §5 ordering:
+
+    oracle  <~  OA-HeMT  <  HomT  <  stale static HeMT
+
+* every node starts at speed 1.0 (that is what the stale estimates were
+  learned on) and its speed then drifts by a per-interval AR(1) process
+  toward a node-specific mean, so heterogeneity *emerges* while the job
+  runs;
+* **stale**: keeps the even time-0 split for all stages (static HeMT with
+  estimates that were true once);
+* **homt**: microtasks over the shared queue — self-balancing, but paying
+  the per-task overhead tax on every one of ``N_MICRO`` tasks;
+* **oa**: ``AdaptivePlan`` re-splits every stage at its barrier from the
+  AR(1)-estimated speeds observed so far (first stage: the same stale even
+  split — the paper's k=1 rule);
+* **oa_bad** / **oa_reskew**: the adaptive loop handed a *mis-skewed*
+  first split (proportions reversed against the drift targets), without /
+  with barrier-level ``ReskewHandoff`` composed in — the cut straggler's
+  residual is folded into the next stage and re-skewed together with the
+  re-planned split, so reskew rescues the bad cold start while the
+  estimator converges;
+* **oracle**: per-stage clairvoyant split — at each barrier the works are
+  chosen so every node finishes simultaneously given the *true* future
+  speed profiles (bisection on the balanced finish time).  This is the
+  completion-time floor for per-stage static splits.
+
+``drift_scenario()`` returns completions plus the converged tail spans so
+the tier-1 suite pins the ordering and the OA-vs-oracle gap (a few
+percent); rows land in the ``oa_hemt`` section of BENCH_sim.json.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import BenchRow, timed
+from repro.core.engine import (
+    AdaptivePlan, PullSpec, StaticSpec, run_job, run_job_cache_clear,
+)
+from repro.core.simulator import SimNode, SimTask, run_static_stage
+from repro.core.speculation import ReskewHandoff
+
+N_NODES = 4
+MU = (1.4, 1.0, 0.7, 0.4)   # drift targets: heterogeneity emerges over time
+RHO = 0.6                   # AR(1) pull toward the mean per interval
+SIGMA = 0.02                # per-interval speed noise
+DT = 40.0                   # seconds between speed re-samples
+HORIZON = 6000.0            # profile length (>> any variant's completion)
+OVERHEAD = 0.3              # per-task scheduling/launch cost (seconds)
+W_STAGE = 160.0             # work per stage (~46 s per stage at sum(MU))
+N_STAGES = 12
+N_MICRO = 64                # HomT microtask count per stage
+TAIL = 6                    # "converged" stages for the OA-vs-oracle gap
+ALPHA = 0.2                 # AR(1) forgetting factor of the OA estimator
+
+
+def drift_nodes(seed: int = 0) -> List[SimNode]:
+    """Piecewise-constant AR(1) speed walks: v(0)=1.0 for every node, then
+    ``v <- mu + RHO * (v - mu) + SIGMA * eps`` every DT seconds."""
+    rng = np.random.default_rng(seed)
+    nodes = []
+    n_seg = int(HORIZON / DT)
+    for i, mu in enumerate(MU):
+        v = 1.0
+        profile: List[Tuple[float, float]] = [(0.0, v)]
+        for k in range(1, n_seg):
+            v = mu + RHO * (v - mu) + SIGMA * rng.standard_normal()
+            v = float(np.clip(v, 0.1, 2.0))
+            profile.append((k * DT, v))
+        nodes.append(SimNode(f"n{i}", profile, OVERHEAD))
+    return nodes
+
+
+def _oracle_split(nodes: List[SimNode], t: float, total: float,
+                  ) -> List[float]:
+    """Clairvoyant balanced split at barrier ``t``: bisect the common
+    finish time T with ``sum_i work_between(t + oh_i, T) = total``, then
+    give each node exactly what it can execute by T."""
+    lo, hi = t, t + total / min(nd.speed_at(t) for nd in nodes) + 1.0
+    while sum(nd.work_between(t + nd.task_overhead, hi) for nd in nodes) \
+            < total:
+        hi += (hi - t)
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        cap = sum(nd.work_between(t + nd.task_overhead, mid) for nd in nodes)
+        if cap >= total:
+            hi = mid
+        else:
+            lo = mid
+    return [nd.work_between(t + nd.task_overhead, hi) for nd in nodes]
+
+
+def oracle_completion(nodes: List[SimNode], summaries_out: List[float],
+                      ) -> float:
+    """Per-stage clairvoyant HeMT: re-split at every barrier from the TRUE
+    profiles; ``summaries_out`` collects per-stage spans."""
+    t = 0.0
+    for _ in range(N_STAGES):
+        works = _oracle_split(nodes, t, W_STAGE)
+        res = run_static_stage(
+            nodes, [[SimTask(w, task_id=i)] for i, w in enumerate(works)],
+            start_time=t)
+        summaries_out.append(res.completion - t)
+        t = res.completion
+    return t
+
+
+def drift_scenario(seed: int = 0) -> Dict[str, Dict]:
+    """Completion + per-stage spans for every variant on the same drifting
+    cluster.  Returns {variant: {"completion", "spans", "tail_mean"}}."""
+    even = (W_STAGE / N_NODES,) * N_NODES
+    out: Dict[str, Dict] = {}
+
+    def put(name: str, completion: float, spans: List[float]) -> None:
+        out[name] = {"completion": completion, "spans": list(spans),
+                     "tail_mean": float(np.mean(spans[-TAIL:]))}
+
+    homt = PullSpec(n_tasks=N_MICRO, task_work=W_STAGE / N_MICRO)
+    sched = run_job(drift_nodes(seed), [homt] * N_STAGES)
+    put("homt", sched.completion, [s.span for s in sched.stages])
+
+    sched = run_job(drift_nodes(seed), [StaticSpec(works=even)] * N_STAGES)
+    put("stale", sched.completion, [s.span for s in sched.stages])
+
+    sched = run_job(drift_nodes(seed), [StaticSpec(works=even)] * N_STAGES,
+                    adaptive=AdaptivePlan(alpha=ALPHA))
+    put("oa", sched.completion, [s.span for s in sched.stages])
+
+    # mis-skewed cold start: proportions reversed against the drift
+    # targets, so the first stage has genuine stragglers for reskew to cut
+    rev = tuple(W_STAGE * m / sum(MU) for m in reversed(MU))
+    sched = run_job(drift_nodes(seed), [StaticSpec(works=rev)] * N_STAGES,
+                    adaptive=AdaptivePlan(alpha=ALPHA))
+    put("oa_bad", sched.completion, [s.span for s in sched.stages])
+
+    reskew = StaticSpec(works=rev, mitigation=ReskewHandoff(1.3))
+    sched = run_job(drift_nodes(seed), [reskew] * N_STAGES,
+                    adaptive=AdaptivePlan(alpha=ALPHA))
+    put("oa_reskew", sched.completion, [s.span for s in sched.stages])
+
+    spans: List[float] = []
+    put("oracle", oracle_completion(drift_nodes(seed), spans), spans)
+    return out
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    scen: Dict[str, Dict] = {}
+
+    def _run():
+        run_job_cache_clear()
+        return drift_scenario()
+
+    scen, us = timed(_run, repeat=3)
+    total_us = us
+    for name in ("oracle", "oa", "oa_bad", "oa_reskew", "homt", "stale"):
+        v = scen[name]
+        out.append(BenchRow(
+            f"oa_hemt/drift_{name}", 0.0,
+            f"completion={v['completion']:.2f};"
+            f"tail_span={v['tail_mean']:.3f}"))
+    gap = scen["oa"]["tail_mean"] / scen["oracle"]["tail_mean"] - 1.0
+    out.append(BenchRow(
+        "oa_hemt/drift_ordering", total_us,
+        f"oa_vs_oracle_tail_gap={gap:.4f};"
+        f"oa_beats_homt={scen['oa']['completion'] < scen['homt']['completion']};"
+        f"oa_beats_stale={scen['oa']['completion'] < scen['stale']['completion']};"
+        f"homt_beats_stale={scen['homt']['completion'] < scen['stale']['completion']};"
+        f"reskew_rescues_cold_start="
+        f"{scen['oa_reskew']['completion'] < scen['oa_bad']['completion']}"))
+
+    # adaptive run_job throughput on a constant-speed cluster: 64 barriers,
+    # every stage re-planned + re-solved (no O(n) shift reuse possible)
+    nodes = [SimNode.constant(f"c{i}", s, 0.05)
+             for i, s in enumerate((1.0, 0.8, 0.6, 0.4))]
+    specs = [StaticSpec(works=(4.0, 4.0, 4.0, 4.0))] * 64
+
+    def _adaptive_job():
+        run_job_cache_clear()
+        return run_job(nodes, specs, adaptive=AdaptivePlan(alpha=0.3))
+
+    sched, us = timed(_adaptive_job, repeat=5)
+    out.append(BenchRow(
+        "oa_hemt/adaptive_job_64x4", us,
+        f"completion={sched.completion:.2f};stages=64"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

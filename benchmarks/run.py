@@ -11,15 +11,20 @@ at 1k/10k/100k tasks (benchmarks.bench_sim_engine) and the kernel rows
 (benchmarks.bench_kernels) — so successive PRs can diff BENCH_sim.json.
 
 ``--check [PATH]`` re-runs only the sim_engine rows and exits non-zero if
-any timed row regressed by more than 2x against the committed baseline
-(or vanished from the fresh run) — the ROADMAP CI gate.  Derived-only
-rows (us_per_call == 0) are skipped; a PR that intentionally changes the
-row set regenerates the baseline with ``--json`` in the same change.
+any timed row regressed by more than the threshold against the committed
+baseline (or vanished from the fresh run) — the ROADMAP CI gate.  The
+threshold defaults to 2x and can be overridden per environment —
+``--threshold 4`` beats the ``BENCH_CHECK_THRESHOLD`` env var beats the
+default — because hardcoded headroom is wrong for noisy shared CI
+runners.  Derived-only rows (us_per_call == 0) are skipped; a PR that
+intentionally changes the row set regenerates the baseline with
+``--json`` in the same change.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -33,6 +38,7 @@ MODULES = [
     "benchmarks.bench_fig18_pagerank",
     "benchmarks.bench_hemt_dp",
     "benchmarks.bench_speculation",
+    "benchmarks.bench_oa_hemt",
     "benchmarks.bench_sim_engine",
     "benchmarks.bench_kernels",
 ]
@@ -40,12 +46,42 @@ MODULES = [
 # modules whose rows land in the --json perf-trajectory file
 JSON_SECTIONS = {
     "benchmarks.bench_speculation": "speculation",
+    "benchmarks.bench_oa_hemt": "oa_hemt",
     "benchmarks.bench_sim_engine": "sim",
     "benchmarks.bench_kernels": "kernels",
 }
 
+DEFAULT_THRESHOLD = 2.0
 
-def compare_rows(baseline_rows, fresh_rows, threshold: float = 2.0):
+
+def resolve_threshold(cli: "float | None" = None) -> float:
+    """--check regression threshold: CLI flag > BENCH_CHECK_THRESHOLD env
+    var > the 2x default.  A malformed, non-positive, or NaN value is a
+    configuration error, not something to silently paper over — a zero or
+    NaN threshold would make the gate always-fail or always-pass."""
+    if cli is not None:
+        return _valid_threshold(float(cli), f"--threshold {cli}")
+    env = os.environ.get("BENCH_CHECK_THRESHOLD")
+    if env is None or env == "":
+        return DEFAULT_THRESHOLD
+    try:
+        val = float(env)
+    except ValueError:
+        raise SystemExit(
+            f"BENCH_CHECK_THRESHOLD={env!r} is not a number")
+    return _valid_threshold(val, f"BENCH_CHECK_THRESHOLD={env!r}")
+
+
+def _valid_threshold(val: float, label: str) -> float:
+    if val != val:                            # NaN: every comparison False
+        raise SystemExit(f"{label} is NaN")
+    if val <= 0.0:
+        raise SystemExit(f"{label} must be positive")
+    return val
+
+
+def compare_rows(baseline_rows, fresh_rows,
+                 threshold: float = DEFAULT_THRESHOLD):
     """Regression messages for fresh sim_engine rows vs. a baseline.
 
     A baseline row regresses when its fresh ``us_per_call`` exceeds
@@ -71,10 +107,13 @@ def compare_rows(baseline_rows, fresh_rows, threshold: float = 2.0):
 
 
 def run_check(baseline_path: str, fresh_rows=None,
-              threshold: float = 2.0) -> int:
+              threshold: "float | None" = None) -> int:
     """The ``--check`` CI gate: fresh sim_engine rows vs. the committed
     baseline.  ``fresh_rows`` (dicts like ``BenchRow.as_dict``) can be
-    injected for tests; by default the sim_engine benchmarks run live."""
+    injected for tests; by default the sim_engine benchmarks run live.
+    ``threshold=None`` resolves via :func:`resolve_threshold` (env var or
+    the 2x default)."""
+    threshold = resolve_threshold(threshold)
     try:
         with open(baseline_path) as fh:
             baseline = json.load(fh)
@@ -115,11 +154,18 @@ def main() -> None:
     parser.add_argument("--check", nargs="?", const="BENCH_sim.json",
                         default=None, metavar="PATH",
                         help="re-run the sim_engine rows and exit non-zero "
-                             "on >2x us_per_call regressions vs the given "
-                             "baseline JSON (default: BENCH_sim.json)")
+                             "on us_per_call regressions beyond the "
+                             "threshold vs the given baseline JSON "
+                             "(default: BENCH_sim.json)")
+    parser.add_argument("--threshold", type=float, default=None,
+                        metavar="X",
+                        help="--check regression threshold (default: "
+                             "BENCH_CHECK_THRESHOLD env var, else "
+                             f"{DEFAULT_THRESHOLD:g}x) — loaded CI runners "
+                             "want more headroom than a quiet laptop")
     args = parser.parse_args()
     if args.check is not None:
-        raise SystemExit(run_check(args.check))
+        raise SystemExit(run_check(args.check, threshold=args.threshold))
     if args.json is not None and not args.json.endswith(".json"):
         parser.error(f"--json path {args.json!r} must end in .json "
                      f"(did you mean `run.py {args.json} --json`?)")

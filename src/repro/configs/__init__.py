@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict, List
+from typing import Dict, List
 
 from repro.configs.base import (  # noqa: F401 (re-export)
     ArchBundle, AttentionConfig, MeshConfig, ModelConfig, MoEConfig,

@@ -27,8 +27,8 @@ from repro.core.partitioner import (  # noqa: F401
 )
 from repro.core.skewed_hash import bucket_of, bucket_of_jnp, integer_capacities  # noqa: F401
 from repro.core.engine import (  # noqa: F401
-    JobSchedule, PullSpec, StageSummary, StaticSpec, plan_path, run_job,
-    run_job_cache_clear,
+    AdaptivePlan, JobSchedule, PullSpec, StageSummary, StaticSpec, plan_path,
+    run_job, run_job_cache_clear,
 )
 from repro.core.speculation import (  # noqa: F401
     ReskewHandoff, SpeculativeCopies, WorkStealing,

@@ -88,6 +88,25 @@ for differential tests:
    event semantics live in the ``speculation`` module docstring;
    differential tests pin the engine against a naive per-event oracle.
 
+5. **Online adaptation** (:class:`AdaptivePlan`): the paper's full §5
+   OA-HeMT loop at ``run_job`` scale.  ``run_job(..., adaptive=plan)``
+   feeds every stage's observed per-node (executed work, busy time) into
+   the plan's :class:`~repro.core.estimators.ARSpeedEstimator` at the
+   stage's barrier, and re-derives each upcoming ``StaticSpec``'s split
+   proportions from the updated speed estimates (``d_i = D v_i / V``)
+   before it is solved.  Composition with barrier-level
+   :class:`~repro.core.speculation.ReskewHandoff` is exact: a cut stage's
+   residual is first folded into the next stage's planned works and the
+   re-plan then re-splits the *combined* total — both the split and the
+   residual are re-skewed by the freshest estimates.  Solve-cache
+   correctness needs no estimator state in the cache keys: a re-planned
+   stage is a *new* ``StaticSpec`` value whose works tuple is a pure
+   function of the estimator state, and the caches key solves by spec
+   value — two adaptive stages collide in the LRU only when their splits
+   (and therefore their solves) are identical.  ``PullSpec`` stages pass
+   through un-replanned (the shared queue self-balances at run time) but
+   still feed the estimator.
+
 Tie semantics: the one deliberate divergence from the oracle is simultaneous
 I/O drains.  When two flows hit zero at the exact same instant, the legacy
 loop re-candidates the non-owner at its (already past) ``cpu_done_at``,
@@ -103,11 +122,13 @@ from __future__ import annotations
 import heapq
 import math
 from collections import OrderedDict, deque
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.estimators import ARSpeedEstimator
+from repro.core.partitioner import hemt_split_floats, proportional_split
 from repro.core.simulator import (
     SimNode, SimTask, StageResult, TaskRecord, _stage_result,
 )
@@ -656,6 +677,7 @@ def _pull_hetero_try_batched(oh: Sequence[float], speeds: Sequence[float],
         return None                     # zero-period degenerate: heap scan
     e = np.full(n, float(start_time))
     counts = np.zeros(n, np.int64)
+    wsums = np.zeros(n, np.float64)
     if want_records:
         node_of = np.empty(n_tasks, np.int64)
         start_of = np.empty(n_tasks, np.float64)
@@ -694,38 +716,43 @@ def _pull_hetero_try_batched(oh: Sequence[float], speeds: Sequence[float],
             end_of[k0:k1] = pulls + p[sel]
         e = e + taken * p
         counts += taken
+        wsums += taken * run_w[r]
     node_end = np.where(counts > 0, e, start_time)
     per_task = (node_of, start_of, end_of) if want_records else None
-    return node_end.tolist(), counts.tolist(), per_task
+    return node_end.tolist(), counts.tolist(), wsums.tolist(), per_task
 
 
 def _pull_hetero_summary(oh: Sequence[float], speeds: Sequence[float],
                          works: Sequence[float], start_time: float,
-                         ) -> Tuple[List[float], List[int]]:
-    """Record-free merged-grid scan: per-node (last finish, task count)
-    only — the whole-job (``run_job``) hot loop, with no per-task object
-    work at all.  Blocky work sequences (runs of equal sizes) take the
-    numpy run-length batched path."""
+                         ) -> Tuple[List[float], List[int], List[float]]:
+    """Record-free merged-grid scan: per-node (last finish, task count,
+    executed work) only — the whole-job (``run_job``) hot loop, with no
+    per-task object work at all.  Blocky work sequences (runs of equal
+    sizes) take the numpy run-length batched path."""
     batched = _pull_hetero_try_batched(oh, speeds, works, start_time, False)
     if batched is not None:
-        return batched[0], batched[1]
+        return batched[0], batched[1], batched[2]
     n, n_tasks = len(speeds), len(works)
     heap, _ = _pull_hetero_heap(oh, speeds, works, start_time)
     counts = [0] * n
+    wsums = [0.0] * n
     for _, i in heap:
         counts[i] = 1
+        wsums[i] = works[i]
     replace = heapq.heapreplace
-    for w in works[min(n, n_tasks):]:
+    for k in range(min(n, n_tasks), n_tasks):
+        w = works[k]
         e0, i = heap[0]
         e = e0 + oh[i]
         if w > 0.0:
             e += w / speeds[i]
         counts[i] += 1
+        wsums[i] += w
         replace(heap, (e, i))
     node_end = [start_time] * n
     for e0, i in heap:
         node_end[i] = e0
-    return node_end, counts
+    return node_end, counts, wsums
 
 
 def _closed_form_pull_hetero(nodes: Sequence[SimNode], speeds: Sequence[float],
@@ -740,7 +767,7 @@ def _closed_form_pull_hetero(nodes: Sequence[SimNode], speeds: Sequence[float],
     oh = [nd.task_overhead for nd in nodes]
     batched = _pull_hetero_try_batched(oh, speeds, work, start_time, True)
     if batched is not None:
-        node_end, _, (node_arr, start_arr, end_arr) = batched
+        node_end, _, _, (node_arr, start_arr, end_arr) = batched
         names = [nd.name for nd in nodes]
         records = list(map(TaskRecord, (t.task_id for t in tasks),
                            (names[i] for i in node_arr.tolist()),
@@ -917,6 +944,9 @@ class StageSummary:
     idle_time: float
     node_finish: Dict[str, float]
     counts: Dict[str, int]           # tasks completed per node
+    # CPU work each node actually executed (post re-skew cut, where one
+    # applies) — what the OA-HeMT loop feeds the AR(1) estimator as d_i
+    work: Dict[str, float] = field(default_factory=dict)
 
     @property
     def span(self) -> float:
@@ -934,13 +964,16 @@ class JobSchedule:
 
 
 def _rel_from_offsets(offs: List[float], counts: List[int],
-                      ) -> Tuple[float, float, List[float], List[int]]:
-    """(span, idle, offsets, counts) from per-node finish offsets; idle is
-    the finish spread over nodes that ran >= 1 task (Claim 1 metric)."""
+                      works: List[float],
+                      ) -> Tuple[float, float, List[float], List[int],
+                                 List[float]]:
+    """(span, idle, offsets, counts, executed works) from per-node finish
+    offsets; idle is the finish spread over nodes that ran >= 1 task
+    (Claim 1 metric)."""
     ran = [o for o, c in zip(offs, counts) if c]
     span = max(offs) if offs else 0.0
     idle = (max(ran) - min(ran)) if ran else 0.0
-    return span, idle, offs, counts
+    return span, idle, offs, counts, works
 
 
 def _rel_summary_static(oh: Sequence[float], speeds: Sequence[float],
@@ -948,7 +981,7 @@ def _rel_summary_static(oh: Sequence[float], speeds: Sequence[float],
     if len(spec.works) != len(speeds):
         raise ValueError("StaticSpec needs one macrotask work per node")
     offs = [o + w / s for o, w, s in zip(oh, spec.works, speeds)]
-    return _rel_from_offsets(offs, [1] * len(offs))
+    return _rel_from_offsets(offs, [1] * len(offs), list(spec.works))
 
 
 def _rel_summary_pull_uniform(oh: Sequence[float], speeds: Sequence[float],
@@ -960,16 +993,20 @@ def _rel_summary_pull_uniform(oh: Sequence[float], speeds: Sequence[float],
     pull_node, _ = _pull_uniform_grid(periods, n_tasks)
     counts = np.bincount(pull_node, minlength=len(speeds))
     offs = [float(c * p) if c else 0.0 for c, p in zip(counts, periods)]
-    return _rel_from_offsets(offs, counts.tolist())
+    return _rel_from_offsets(offs, counts.tolist(),
+                             [float(c * work) for c in counts])
 
 
 def _rel_summary_from_result(res: StageResult, names: Sequence[str],
                              start: float):
     counts = {nm: 0 for nm in names}
+    works = {nm: 0.0 for nm in names}
     for r in res.records:
         counts[r.node] += 1
+        works[r.node] += r.cpu_work
     offs = [res.node_finish[nm] - start for nm in names]
-    return _rel_from_offsets(offs, [counts[nm] for nm in names])
+    return _rel_from_offsets(offs, [counts[nm] for nm in names],
+                             [works[nm] for nm in names])
 
 
 def _spec_tasks(spec) -> Sequence[Sequence[SimTask]]:
@@ -983,10 +1020,10 @@ def _spec_tasks(spec) -> Sequence[Sequence[SimTask]]:
 def _rel_summary(nodes: Sequence[SimNode], speeds: Sequence[float],
                  spec, uplink_bw: Optional[float]):
     """Solve one stage spec at relative start 0 on a constant-speed
-    cluster: (span, idle, per-node finish offsets, per-node counts).
-    Stages with an event-level mitigation policy run the mitigated event
-    calendar (still start-invariant on constant speeds, so the solve stays
-    shiftable and cacheable)."""
+    cluster: (span, idle, per-node finish offsets, per-node counts,
+    per-node executed works).  Stages with an event-level mitigation
+    policy run the mitigated event calendar (still start-invariant on
+    constant speeds, so the solve stays shiftable and cacheable)."""
     oh = [nd.task_overhead for nd in nodes]
     n = len(nodes)
     if is_event_policy(spec.mitigation):
@@ -1000,13 +1037,15 @@ def _rel_summary(nodes: Sequence[SimNode], speeds: Sequence[float],
     works = spec.works
     n_tasks = spec.n_tasks if works is None else len(works)
     if n_tasks == 0:
-        return 0.0, 0.0, [0.0] * n, [0] * n
+        return 0.0, 0.0, [0.0] * n, [0] * n, [0.0] * n
     if uplink_bw and spec.io_mb > _EPS and spec.datanode >= 0:
         if _io_sym_spans_ok(np.asarray(oh), np.asarray(speeds),
                             spec.work_array(), spec.io_mb, uplink_bw, n):
             _, _, node_end, counts = _io_sym_schedule(
                 n, n_tasks, spec.io_mb, uplink_bw, 0.0)
-            return _rel_from_offsets(node_end, counts)
+            wsums = np.bincount(np.arange(n_tasks) % n,
+                                weights=spec.work_array(), minlength=n)
+            return _rel_from_offsets(node_end, counts, wsums.tolist())
         res = run_stage_events(nodes, _spec_tasks(spec), pull=True,
                                uplink_bw=uplink_bw)
         return _rel_summary_from_result(res, [nd.name for nd in nodes], 0.0)
@@ -1016,8 +1055,8 @@ def _rel_summary(nodes: Sequence[SimNode], speeds: Sequence[float],
         return _rel_summary_pull_uniform(oh, speeds, n_tasks, w0)
     if works is None:               # uniform but degenerate (zero period)
         works = (w0,) * n_tasks
-    node_end, counts = _pull_hetero_summary(oh, speeds, works, 0.0)
-    return _rel_from_offsets(node_end, counts)
+    node_end, counts, wsums = _pull_hetero_summary(oh, speeds, works, 0.0)
+    return _rel_from_offsets(node_end, counts, wsums)
 
 
 def _abs_summary(nodes: Sequence[SimNode], spec, uplink_bw: Optional[float],
@@ -1030,10 +1069,11 @@ def _abs_summary(nodes: Sequence[SimNode], spec, uplink_bw: Optional[float],
                          uplink_bw=uplink_bw, start_time=start,
                          mitigation=mit)
     names = [nd.name for nd in nodes]
-    _, idle, offs, counts = _rel_summary_from_result(res, names, start)
+    _, idle, offs, counts, wexec = _rel_summary_from_result(res, names, start)
     return StageSummary(start, res.completion, idle,
                         dict(res.node_finish),
-                        {nm: c for nm, c in zip(names, counts)})
+                        {nm: c for nm, c in zip(names, counts)},
+                        {nm: w for nm, w in zip(names, wexec)})
 
 
 # Module-level LRU sharing constant-speed solves across run_job calls
@@ -1082,11 +1122,12 @@ def _apply_reskew(nodes: Sequence[SimNode], spec: "StaticSpec",
         return summ, 0.0, []
     throughputs = [x / c if c > 0.0 else 0.0
                    for x, c in zip(executed, clipped)]
-    span, idle, offs2, _ = _rel_from_offsets(
-        clipped, [summ.counts[nm] for nm in names])
+    span, idle, offs2, _, _ = _rel_from_offsets(
+        clipped, [summ.counts[nm] for nm in names], executed)
     new = StageSummary(summ.start, summ.start + span, idle,
                        {nm: summ.start + o for nm, o in zip(names, offs2)},
-                       dict(summ.counts))
+                       dict(summ.counts),
+                       {nm: x for nm, x in zip(names, executed)})
     return new, residual, throughputs
 
 
@@ -1109,9 +1150,131 @@ def _fold_spec(spec, residual: float, throughputs: Sequence[float]):
                     mitigation=spec.mitigation)
 
 
+class AdaptiveStageLog(NamedTuple):
+    """One ``run_job`` stage as the adaptive plan finally shaped it."""
+    index: int
+    works: Optional[Tuple[float, ...]]   # final static split (None for pull)
+    speeds: Optional[Tuple[float, ...]]  # estimates used (None: kept planned)
+    replanned: bool
+
+
+class AdaptivePlan:
+    """Online-adaptive HeMT (paper §5) across ``run_job`` barriers.
+
+    At every program barrier the finished stage's observed per-node
+    (executed work, busy time) pairs are fed into an
+    :class:`~repro.core.estimators.ARSpeedEstimator`; each upcoming
+    :class:`StaticSpec` whose estimator already has direct observations is
+    re-split ``d_i = D v_i / V`` from the updated estimates before it is
+    solved.  The first stage (cold estimator) runs the caller's planned
+    split — the paper's k=1 rule lives with the caller.  :class:`PullSpec`
+    stages are never re-planned (the shared queue self-balances at run
+    time) but still feed the estimator.
+
+    Composition with :class:`~repro.core.speculation.ReskewHandoff`: the
+    residual a cut stage carries is folded into the next stage's works
+    *before* the re-plan, so the re-split redistributes planned work and
+    residual together — both re-skewed by the freshest estimates.
+
+    ``quantum`` makes re-planned splits integral: works become multiples
+    of ``quantum`` via largest-remainder rounding (``proportional_split``),
+    with at least ``min_units`` quanta per node — the HeMT-DP driver's
+    whole-grain macrotasks (``min_units`` requires a quantum: a float
+    split has no unit to floor by, so passing it without one raises
+    rather than silently dropping the paper-§5.1 starvation guard).  A
+    total that is not a whole number of quanta (a re-skew hand-off folds
+    *continuous* residual work into the next stage) is conserved exactly:
+    the whole quanta are split proportionally and the sub-quantum
+    remainder rides as a fractional tail on the fastest-estimated
+    executor.  Quantum plans observe speeds in **quanta per second**
+    (executed work / quantum), the native unit of a whole-grain system —
+    the same grains/sec the driver's :class:`~repro.core.planner.
+    GrainPlanner` records, so sharing its estimator mixes no units
+    (splits are ratio-based and unit-invariant either way).
+
+    ``estimator`` may be shared with a scheduler
+    (:meth:`repro.core.scheduler.AdaptiveHeMTScheduler.adaptive_plan`) so
+    job-sequence learning and in-job barrier learning accumulate into one
+    workload-specific state.  ``history`` logs every stage's final works
+    (re-planned or kept), which is how drivers recover per-stage
+    assignments from a record-free adaptive run.
+    """
+
+    def __init__(self, estimator: Optional[ARSpeedEstimator] = None, *,
+                 alpha: float = 0.0, cold_start: str = "mean",
+                 quantum: Optional[float] = None, min_units: int = 0):
+        if estimator is None:
+            estimator = ARSpeedEstimator(alpha=alpha, cold_start=cold_start)
+        if quantum is not None and quantum <= 0.0:
+            raise ValueError("quantum must be positive")
+        if min_units < 0:
+            raise ValueError("min_units must be >= 0")
+        if min_units > 0 and quantum is None:
+            raise ValueError("min_units needs a quantum to floor by "
+                             "(float splits apply no per-node floor)")
+        self.estimator = estimator
+        self.quantum = quantum
+        self.min_units = min_units
+        self.history: List[AdaptiveStageLog] = []
+
+    def _split_with(self, speeds: Sequence[float], total: float,
+                    ) -> List[float]:
+        if self.quantum is None:
+            return hemt_split_floats(total, speeds)
+        units = int(round(total / self.quantum))
+        if abs(units * self.quantum - total) > 1e-9 * max(1.0, abs(total)):
+            # continuous residual folded by a re-skew hand-off: split the
+            # whole quanta, ride the sub-quantum remainder on the fastest
+            # estimated executor (work is conserved exactly; a crash here
+            # would strand the run mid-job on an internally-generated
+            # total the caller never chose)
+            units = int(total / self.quantum)
+        remainder = total - units * self.quantum
+        works = [float(u * self.quantum) for u in
+                 proportional_split(units, speeds,
+                                    min_share=self.min_units)]
+        if remainder > 0.0:
+            works[max(range(len(works)), key=lambda i: speeds[i])] \
+                += remainder
+        return works
+
+    def split(self, names: Sequence[str], total: float) -> List[float]:
+        """The current estimates' HeMT split of ``total`` work."""
+        return self._split_with(self.estimator.speeds(names), total)
+
+    def replan(self, names: Sequence[str], spec):
+        """Re-derive a StaticSpec's split from the current estimates (any
+        reskew residual has already been folded into ``spec.works``).
+        Returns the spec to solve; logs it either way."""
+        k = len(self.history)
+        if isinstance(spec, StaticSpec) and self.estimator.known():
+            speeds = self.estimator.speeds(names)
+            works = tuple(self._split_with(speeds, sum(spec.works)))
+            self.history.append(
+                AdaptiveStageLog(k, works, tuple(speeds), True))
+            return StaticSpec(works=works, mitigation=spec.mitigation)
+        works = spec.works if isinstance(spec, StaticSpec) else None
+        self.history.append(AdaptiveStageLog(k, works, None, False))
+        return spec
+
+    def observe(self, names: Sequence[str], summ: StageSummary) -> None:
+        """Feed one finished stage's per-node (executed work, busy time)
+        into the estimator (nodes that executed nothing are skipped — the
+        paper only updates observed executors).  Quantum plans record
+        speeds in quanta/sec so a shared GrainPlanner estimator sees one
+        consistent unit across per-step and windowed scheduling."""
+        scale = self.quantum if self.quantum is not None else 1.0
+        for nm in names:
+            w = summ.work.get(nm, 0.0)
+            dt = summ.node_finish[nm] - summ.start
+            if w > 0.0 and dt > 0.0:
+                self.estimator.observe(nm, w / scale, dt)
+
+
 def run_job(nodes: Sequence[SimNode], stages: Sequence,
             uplink_bw: Optional[float] = None,
-            start_time: float = 0.0) -> JobSchedule:
+            start_time: float = 0.0,
+            adaptive: Optional[AdaptivePlan] = None) -> JobSchedule:
     """Run a whole multi-stage job: each stage starts at the previous
     stage's completion (program barrier).
 
@@ -1130,6 +1293,18 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
     and the residual work is folded into the next stage's split (the last
     stage is never cut — there is no later split to fold into; a cut-off
     stage's residual skips empty stages until a foldable one appears).
+
+    ``adaptive`` (an :class:`AdaptivePlan`) turns the barrier sequence
+    into the paper's §5 OA-HeMT loop: each finished stage's per-node
+    (executed work, busy time) feeds the plan's AR(1) estimator, and every
+    upcoming ``StaticSpec`` is re-split from the updated estimates —
+    residual fold first, re-plan second, so a re-skew hand-off's residual
+    is re-skewed along with the split.  Solve caching stays exact without
+    estimator state in the keys: a re-planned stage is a fresh
+    ``StaticSpec`` *value*, and both cache levels key solves by spec value
+    (the id() level never sees a re-planned spec twice), so adaptive
+    stages can only share cache entries with identical splits — whose
+    solves are identical.
     """
     speeds = _constant_speeds(nodes)
     names = [nd.name for nd in nodes]
@@ -1152,6 +1327,9 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
             spec = _fold_spec(spec, carry[0], carry[1])
             folded_alive.append(spec)
             carry = None
+        if adaptive is not None:
+            spec = adaptive.replan(names, spec)
+            folded_alive.append(spec)
         if speeds is None:
             summ = _abs_summary(nodes, spec, uplink_bw, t)
         else:
@@ -1164,25 +1342,29 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
                 if rel is not None:
                     _SOLVE_CACHE.move_to_end(key)
                 else:
-                    span, idle, offs, counts = _rel_summary(
+                    span, idle, offs, counts, wexec = _rel_summary(
                         nodes, speeds, spec, uplink_bw)
-                    rel = (span, idle, tuple(offs), tuple(counts))
+                    rel = (span, idle, tuple(offs), tuple(counts),
+                           tuple(wexec))
                     if cheap_hash:
                         _SOLVE_CACHE[key] = rel
                         if len(_SOLVE_CACHE) > _SOLVE_CACHE_MAX:
                             _SOLVE_CACHE.popitem(last=False)
                 by_id[id(spec)] = rel
-            span, idle, offs, counts = rel
+            span, idle, offs, counts, wexec = rel
             summ = StageSummary(
                 t, t + span, idle,
                 {nm: t + o for nm, o in zip(names, offs)},
-                {nm: c for nm, c in zip(names, counts)})
+                {nm: c for nm, c in zip(names, counts)},
+                {nm: w for nm, w in zip(names, wexec)})
         if (isinstance(spec, StaticSpec)
                 and isinstance(spec.mitigation, ReskewHandoff)
                 and k + 1 < len(stage_list)):
             summ, residual, vhat = _apply_reskew(nodes, spec, summ, names)
             if residual > 0.0:
                 carry = (residual, vhat)
+        if adaptive is not None:
+            adaptive.observe(names, summ)
         summaries.append(summ)
         t = summ.completion
     return JobSchedule(t, summaries)

@@ -15,7 +15,6 @@ contention; short probe tasks measure the true ratio (paper learns
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 

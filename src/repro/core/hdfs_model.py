@@ -17,7 +17,6 @@ shard replicas ~ datanodes, concurrently-scheduled grains ~ readers.
 from __future__ import annotations
 
 import math
-from typing import List
 
 import numpy as np
 

@@ -9,7 +9,7 @@ sum(d_i) == D exactly and the split is within one quantum of ideal.
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 from repro.core.estimators import normalized
 

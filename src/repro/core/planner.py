@@ -13,9 +13,8 @@ cost of per-steal overhead (host RPC + input re-route).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 from repro.core.estimators import ARSpeedEstimator
 from repro.core.partitioner import even_split, proportional_split

@@ -17,14 +17,12 @@ materializing task records per stage.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.capacity import BurstableNode, burstable_split
 from repro.core.estimators import ARSpeedEstimator, FudgeFactorLearner
-from repro.core.partitioner import (
-    even_split, hemt_split_floats, proportional_split,
-)
+from repro.core.partitioner import hemt_split_floats
 from repro.core.simulator import (
     SimNode, SimTask, StageResult, run_pull_stage, run_static_stage,
 )
@@ -70,11 +68,50 @@ class AdaptiveHeMTScheduler:
         split = hemt_split_floats(total_work, speeds)
         if self.min_share > 0:
             floor = self.min_share * total_work
-            excess = sum(max(0.0, floor - s) for s in split)
             split = [max(s, floor) for s in split]
             scale = total_work / sum(split)
             split = [s * scale for s in split]
         return split
+
+    def adaptive_plan(self, quantum: Optional[float] = None,
+                      min_units: int = 0):
+        """An :class:`~repro.core.engine.AdaptivePlan` sharing THIS
+        scheduler's estimator, for handing to ``run_job``/
+        ``MultiStageJob.run``: barrier-level observations inside a job and
+        job-level observations across the submission queue accumulate into
+        the same workload-specific AR(1) state (paper §5.1)."""
+        from repro.core.engine import AdaptivePlan
+        return AdaptivePlan(estimator=self.estimator, quantum=quantum,
+                            min_units=min_units)
+
+    def run_simulated_job(self, nodes: Sequence[SimNode],
+                          stage_works: Sequence[float],
+                          adaptive: bool = True) -> List[JobResult]:
+        """Run ONE multi-stage job (program barriers between stages)
+        through ``engine.run_job``, re-planning every stage's split at its
+        barrier from the shared estimator when ``adaptive`` (the paper's
+        OA-HeMT loop; ``adaptive=False`` is the stale-static baseline that
+        keeps the submission-time splits).  Per-stage results are appended
+        to ``history`` exactly like per-job results from
+        :meth:`run_simulated_sequence`."""
+        from repro.core.engine import StaticSpec, run_job
+        specs = [StaticSpec(works=tuple(self.plan(w))) for w in stage_works]
+        plan = self.adaptive_plan() if adaptive else None
+        base = len(self.history)
+        sched = run_job(nodes, specs, adaptive=plan)
+        for k, summ in enumerate(sched.stages):
+            split = [summ.work.get(nd.name, 0.0) for nd in nodes]
+            if not adaptive:
+                # keep the estimator in the loop even without re-planning
+                # (a stale-static scheduler still observes, paper §5)
+                for nd, w in zip(nodes, split):
+                    dt = summ.node_finish[nd.name] - summ.start
+                    if w > 0.0 and dt > 0.0:
+                        self.estimator.observe(nd.name, w, dt)
+            speeds = self.estimator.speeds([nd.name for nd in nodes])
+            self.history.append(JobResult(base + k, summ.span,
+                                          summ.idle_time, split, speeds))
+        return self.history[base:]
 
     def record(self, job_index: int, split: Sequence[float],
                elapsed: Sequence[float], result: Optional[StageResult] = None,
@@ -220,7 +257,7 @@ class MultiStageJob:
 
     def run(self, nodes: Sequence[SimNode], weights: Optional[Sequence[float]],
             n_tasks_per_stage: Optional[int] = None, records: bool = False,
-            mitigation=None) -> Tuple[float, List]:
+            mitigation=None, adaptive=None) -> Tuple[float, List]:
         """weights=None -> HomT with n_tasks_per_stage; else HeMT skewed.
 
         Thin wrapper over ``engine.run_job``: per-node finish vectors are
@@ -229,9 +266,17 @@ class MultiStageJob:
         ``StageSummary`` per stage).  ``records=True`` re-enters the engine
         once per stage instead and returns full ``StageResult`` objects
         with per-task records (the differential-test / debugging path).
+        ``adaptive`` (an :class:`~repro.core.engine.AdaptivePlan`) re-plans
+        each HeMT stage's split at its barrier from AR(1)-learned speeds —
+        the paper's OA-HeMT loop riding the same run_job call.
         """
         if records:
             from repro.core.speculation import ReskewHandoff
+            if adaptive is not None:
+                raise ValueError(
+                    "records=True re-enters the engine per stage; "
+                    "per-barrier adaptive re-planning only runs through "
+                    "run_job (records=False)")
             if isinstance(mitigation, ReskewHandoff):
                 raise ValueError(
                     "records=True re-enters the engine per stage and cannot "
@@ -257,5 +302,6 @@ class MultiStageJob:
             return t, results
         from repro.core.engine import run_job
         sched = run_job(nodes, self.specs(weights, n_tasks_per_stage,
-                                          mitigation=mitigation))
+                                          mitigation=mitigation),
+                        adaptive=adaptive)
         return sched.completion, sched.stages

@@ -26,7 +26,6 @@ constant-speed clusters.
 """
 from __future__ import annotations
 
-import heapq
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
@@ -320,7 +319,8 @@ def run_static_stage(nodes: Sequence[SimNode],
 
 
 _ENGINE_EXPORTS = ("run_job", "PullSpec", "StaticSpec", "JobSchedule",
-                   "StageSummary", "plan_path", "run_job_cache_clear")
+                   "StageSummary", "plan_path", "run_job_cache_clear",
+                   "AdaptivePlan")
 
 
 def __getattr__(name: str):

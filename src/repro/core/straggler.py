@@ -20,12 +20,11 @@ runtime monitor and the simulator speculate under one definition.
 """
 from __future__ import annotations
 
-import math
 import statistics
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.simulator import SimNode, SimTask, StageResult, run_pull_stage
+from repro.core.simulator import SimNode, SimTask, run_pull_stage
 from repro.core.speculation import SpeculativeCopies
 
 

@@ -10,11 +10,10 @@ grain (HeMT re-skew, work stealing, elastic replan) moves no data.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Sequence
 
 import numpy as np
 
-from repro.core.partitioner import proportional_split
 from repro.data.pipeline import SyntheticCorpus
 
 

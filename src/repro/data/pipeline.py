@@ -19,11 +19,10 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-import jax.numpy as jnp
 
 from repro.core.hdfs_model import p_diff_block, p_same_block
 

@@ -81,9 +81,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ki == n_kv_blocks - 1)
     def _finalize():
-        l = l_scr[...]
+        l_sum = l_scr[...]
         # rows with no live kv block (can happen off the padded tail) -> 0
-        denom = jnp.where(l == 0.0, 1.0, l)
+        denom = jnp.where(l_sum == 0.0, 1.0, l_sum)
         o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 

@@ -7,7 +7,6 @@ neighbouring ops.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -9,8 +9,7 @@ arrows of the paper's Fig 6 information exchange.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.estimators import ARSpeedEstimator

@@ -113,7 +113,6 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
         p_sh = param_shardings(cfg, mesh, bundle.mesh, report)
         c_sh = cache_shardings(cfg, mesh, bundle.mesh, cell["dstate"],
                                shape.global_batch, report)
-        from jax.sharding import NamedSharding, PartitionSpec as P
         tok_spec = batch_shardings(cfg, mesh, bundle.mesh,
                                    {"t": cell["token"]})["t"]
         args = [cell["params"], cell["dstate"], cell["token"]]

@@ -18,11 +18,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
-from repro.configs.base import (
-    ModelConfig, ShapeConfig, active_param_count, param_count,
-)
+from repro.configs.base import ModelConfig, ShapeConfig, active_param_count
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip

@@ -9,7 +9,7 @@ Pure functions over pytrees — no optax dependency.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ Sequence of events on a resize (DESIGN.md §8):
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 

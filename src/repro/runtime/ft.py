@@ -15,9 +15,7 @@ exactly what the trainer's StepReports carry. `FleetMonitor` consumes them:
 """
 from __future__ import annotations
 
-import math
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.speculation import SpeculativeCopies

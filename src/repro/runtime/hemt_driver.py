@@ -12,6 +12,10 @@ comparisons (HeMT vs HomT vs static) reproduce deterministically.
 
 Modes (paper sections):
   hemt        — OA-HeMT: per-slice grain counts ∝ AR(1) speed estimates (§5)
+  oa-hemt     — like hemt, but `run_window` schedules W steps' barriers in
+                ONE adaptive `engine.run_job` call (per-barrier re-planning
+                from the shared estimator, whole-grain quantum) — O(n)
+                schedule work per step instead of a full engine entry
   homt        — pull-based microtasking over the grain queue (§3, Claim 1)
   static-even — Spark-default: equal macrotasks, no stealing (§4 baseline)
 
@@ -23,23 +27,21 @@ and the math both cost O(1) Python dispatches per step.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchBundle, ModelConfig
+from repro.core.engine import AdaptivePlan, StaticSpec, run_job
 from repro.core.planner import GrainPlanner
 from repro.core.simulator import SimNode, SimTask, run_pull_stage, run_static_stage
 from repro.data.grains import GrainSource, plan_grain_ranges
 from repro.data.pipeline import SyntheticCorpus
 from repro.runtime.train_loop import (
-    GrainAcc, TrainState, grain_acc_init, grain_accumulate_cached,
-    make_apply_step,
+    TrainState, grain_acc_init, grain_accumulate_cached, make_apply_step,
 )
 
 
@@ -76,7 +78,7 @@ class HeMTTrainer:
                  global_batch: int, seq_len: int, mode: str = "hemt",
                  alpha: float = 0.3, grain_cost: float = 1.0, seed: int = 0):
         assert global_batch % grain_batch == 0
-        assert mode in ("hemt", "homt", "static-even")
+        assert mode in ("hemt", "oa-hemt", "homt", "static-even")
         self.cfg, self.bundle = cfg, bundle
         self.slices = list(slices)
         self.mode = mode
@@ -86,7 +88,7 @@ class HeMTTrainer:
         self.grain_cost = grain_cost    # seconds per grain at speed 1.0
         self.corpus = SyntheticCorpus(cfg.vocab_size, seq_len, seed=seed)
         self.source = GrainSource(self.corpus, grain_batch)
-        planner_mode = "hemt" if mode == "hemt" else "homt"
+        planner_mode = "hemt" if mode in ("hemt", "oa-hemt") else "homt"
         self.planner = GrainPlanner([s.name for s in self.slices],
                                     alpha=alpha, mode=planner_mode)
         self.grain_accumulate = grain_accumulate_cached(cfg, bundle)
@@ -138,19 +140,20 @@ class HeMTTrainer:
         return counts, elapsed, res.completion, res.idle_time, steals
 
     # ------------------------------------------------------------------
-    def run_step(self, state: TrainState) -> Tuple[TrainState, StepReport]:
-        step = int(state.step)
-        counts, elapsed, makespan, idle, steals = self._schedule(step)
+    def _execute_math(self, state: TrainState, counts: Dict[str, int],
+                      ) -> Tuple[TrainState, Dict]:
+        """Fold one step's grains and apply the update.
 
-        # real math: every grain's gradient accumulates (order-independent).
-        # All n_grains grains of the step land in the corpus's preallocated
-        # [G, grain_batch, seq] block (no per-grain host stacking) and are
-        # folded with ONE jitted lax.scan dispatch — O(1) dispatches per
-        # step instead of O(grains).  Reusing the block buffer is safe:
-        # jnp.asarray snapshots it for the device, and the step blocks on
-        # its own loss below before the next step refills it.
+        Real math: every grain's gradient accumulates (order-independent).
+        All n_grains grains of the step land in the corpus's preallocated
+        [G, grain_batch, seq] block (no per-grain host stacking) and are
+        folded with ONE jitted lax.scan dispatch — O(1) dispatches per
+        step instead of O(grains).  Reusing the block buffer is safe:
+        jnp.asarray snapshots it for the device, and the step blocks on
+        its own loss before the next step refills it.
+        """
         assignment = plan_grain_ranges(
-            step, self.global_batch, self.grain_batch,
+            int(state.step), self.global_batch, self.grain_batch,
             list(counts), list(counts.values()))
         block = self.source.load_stacked(
             [g for grains in assignment.per_slice.values() for g in grains])
@@ -158,19 +161,71 @@ class HeMTTrainer:
         acc = grain_acc_init(state.params)
         acc = self.grain_accumulate(state.params, acc, stacked)
         self.grain_dispatches += 1
+        return self.apply_step(state, acc, jnp.asarray(self.n_grains))
+
+    def run_step(self, state: TrainState) -> Tuple[TrainState, StepReport]:
+        step = int(state.step)
+        counts, elapsed, makespan, idle, steals = self._schedule(step)
+        state, metrics = self._execute_math(state, counts)
 
         # feed the estimator with the *virtual* observations (work, time)
         self.planner.observe_step(
             {name: {"grains": counts[name], "elapsed": max(elapsed[name], 1e-9)}
              for name in counts if counts[name] > 0})
 
-        state, metrics = self.apply_step(state, acc,
-                                         jnp.asarray(self.n_grains))
         self._clock += makespan
         rep = StepReport(step, self.mode, counts, elapsed, makespan, idle,
                          float(metrics["loss"]), steals)
         self.reports.append(rep)
         return state, rep
+
+    def run_window(self, state: TrainState, n_steps: int,
+                   ) -> TrainState:
+        """OA-HeMT at window scale (mode ``oa-hemt``): schedule the next
+        ``n_steps`` gradient barriers in ONE adaptive ``run_job`` call —
+        each barrier re-plans the next step's grain split from the shared
+        AR(1) estimator, with a whole-grain quantum — then execute the
+        real math per step with the logged counts.  Other modes fall back
+        to per-step :meth:`run_step` scheduling.
+
+        The estimator is fed by the adaptive plan itself (executed grains
+        / busy time per slice at every barrier — the plan's whole-grain
+        quantum normalizes work to grains/sec, the same unit
+        ``planner.observe_step`` records), not via ``observe_step`` — one
+        observation per (slice, barrier) in one unit either way, so
+        per-step and windowed scheduling can be mixed freely.  One
+        deliberate timing difference: a window stage is one *macrotask*
+        per slice (a single ``grain_overhead`` per barrier — the HeMT
+        dispatch amortization), whereas ``run_step``'s static stage pays
+        the overhead per grain; observed throughputs genuinely differ by
+        that amortization.
+        """
+        if self.mode != "oa-hemt" or n_steps <= 0:
+            for _ in range(n_steps):
+                state, _ = self.run_step(state)
+            return state
+        nodes = self._sim_nodes()
+        names = [s.name for s in self.slices]
+        plan0 = self.planner.plan(self.n_grains)
+        spec = StaticSpec(works=tuple(g * self.grain_cost
+                                      for g in plan0.grains))
+        adaptive = AdaptivePlan(estimator=self.planner.estimator,
+                                quantum=self.grain_cost,
+                                min_units=self.planner.min_grains)
+        sched = run_job(nodes, [spec] * n_steps, adaptive=adaptive)
+        for s in range(n_steps):
+            summ = sched.stages[s]
+            works = adaptive.history[s].works
+            counts = {nm: int(round(w / self.grain_cost))
+                      for nm, w in zip(names, works)}
+            elapsed = {nm: summ.node_finish[nm] - summ.start for nm in names}
+            step = int(state.step)
+            state, metrics = self._execute_math(state, counts)
+            rep = StepReport(step, self.mode, counts, elapsed, summ.span,
+                             summ.idle_time, float(metrics["loss"]), 0)
+            self.reports.append(rep)
+        self._clock += sched.completion
+        return state
 
     def run(self, state: TrainState, n_steps: int,
             log: Optional[Callable[[StepReport], None]] = None,

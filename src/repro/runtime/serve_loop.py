@@ -9,15 +9,13 @@ analogue of macrotask skewing.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
-import numpy as np
 
-import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchBundle, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core.estimators import ARSpeedEstimator
 from repro.core.partitioner import proportional_split, even_split
 from repro.models.model import decode_step, prefill

@@ -20,7 +20,7 @@ failing to lower. Fallbacks are recorded so the dry-run can report them.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 

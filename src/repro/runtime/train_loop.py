@@ -23,13 +23,12 @@ Two granularities:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchBundle, ModelConfig, TrainConfig
+from repro.configs.base import ArchBundle, ModelConfig
 from repro.models.model import init_params, loss_fn
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.compression import (

@@ -54,7 +54,8 @@ class KMeansJob:
     def __init__(self, points: np.ndarray, k: int, nodes: Sequence[SimNode],
                  *, mode: str = "hemt", weights: Optional[Sequence[float]] = None,
                  n_tasks: Optional[int] = None, seed: int = 0,
-                 work_per_point: float = 1e-4, mitigation=None):
+                 work_per_point: float = 1e-4, mitigation=None,
+                 adaptive=None):
         assert mode in ("hemt", "homt", "even")
         self.points = points
         self.k = k
@@ -67,6 +68,12 @@ class KMeansJob:
         # iteration's stage spec — covers stale `weights` on a drifted
         # cluster without changing the partition itself
         self.mitigation = mitigation
+        # OA-HeMT: an engine.AdaptivePlan re-splitting each iteration's
+        # macrotasks at its barrier from AR(1)-learned executor speeds —
+        # `weights` (or the even cold-start split) only seeds iteration 0.
+        # The result is partition-invariant, so the math below keeps the
+        # fixed point partition while the schedule adapts.
+        self.adaptive = adaptive
         rng = np.random.default_rng(seed)
         self.centroids = jnp.asarray(
             points[rng.choice(len(points), k, replace=False)])
@@ -77,6 +84,8 @@ class KMeansJob:
     def _partition(self) -> List[int]:
         n = len(self.points)
         if self.mode == "hemt":
+            if self.weights is None:    # adaptive cold start: even split
+                return even_split(n, len(self.nodes))
             return proportional_split(n, self.weights)
         if self.mode == "even":
             return even_split(n, len(self.nodes))
@@ -98,7 +107,8 @@ class KMeansJob:
             spec = StaticSpec(works=tuple(c * self.work_per_point
                                           for c in split),
                               mitigation=self.mitigation)
-        sched = run_job(self.nodes, [spec] * iters, start_time=self._t)
+        sched = run_job(self.nodes, [spec] * iters, start_time=self._t,
+                        adaptive=self.adaptive)
         for it in range(iters):
             # real math, partition-structured: per-partition partial sums
             bounds = np.cumsum([0] + list(split))

@@ -57,7 +57,8 @@ class PageRankJob:
                  nodes: Sequence[SimNode], *, mode: str = "hemt",
                  weights: Optional[Sequence[float]] = None,
                  n_tasks: Optional[int] = None, d: float = 0.85,
-                 work_per_edge: float = 2e-5, mitigation=None):
+                 work_per_edge: float = 2e-5, mitigation=None,
+                 adaptive=None):
         assert mode in ("hemt", "homt", "even")
         self.src, self.dst, self.n = src, dst, n
         self.nodes = list(nodes)
@@ -69,8 +70,16 @@ class PageRankJob:
         # iteration's stage spec — rescues a skewed-hash bucket stranded on
         # a node whose capacity drifted since the weights were learned
         self.mitigation = mitigation
+        # OA-HeMT: an engine.AdaptivePlan re-skews each iteration's
+        # edge-processing stage at its barrier from AR(1)-learned speeds
+        # (rank math is bucket-invariant, so only the schedule adapts; the
+        # shuffle buckets stay fixed, as re-hashing vertices mid-job would
+        # move data, not just work)
+        self.adaptive = adaptive
         ne = len(nodes)
         if mode == "hemt":
+            if weights is None:        # adaptive cold start: even buckets
+                weights = [1.0] * ne
             caps = integer_capacities(weights, resolution=1 << 12)
         else:
             caps = integer_capacities([1.0] * ne, resolution=1 << 12)
@@ -107,7 +116,8 @@ class PageRankJob:
             spec = StaticSpec(works=tuple(c * self.work_per_edge
                                           for c in edges_per_exec),
                               mitigation=self.mitigation)
-        sched = run_job(self.nodes, [spec] * iters, start_time=self._t)
+        sched = run_job(self.nodes, [spec] * iters, start_time=self._t,
+                        adaptive=self.adaptive)
         bucket_sizes = list(np.bincount(self.owner, minlength=ne))
 
         for it in range(iters):

@@ -14,9 +14,14 @@ except ModuleNotFoundError:
     # test_engine.py — plus profile registration as no-ops) so collection
     # and the property tests still run: each @given test executes a fixed
     # number of deterministic pseudo-random examples instead of being
-    # skipped.  RETIRE CONDITION: delete this whole except-branch the day
-    # the container image bakes hypothesis in (i.e. the import above stops
-    # failing on a clean container) — tracked as a ROADMAP.md open item.
+    # skipped.  Both branches are continuously exercised: the py3.12 leg of
+    # .github/workflows/ci.yml installs the real hypothesis while the
+    # py3.10 leg (and this container) runs the stub, so a strategy drifting
+    # outside the stub's subset fails CI rather than lingering.  RETIRE
+    # CONDITION: delete this whole except-branch the day the container
+    # image bakes hypothesis in (i.e. the import above stops failing on a
+    # clean container) — tracked as a ROADMAP.md open item; the CI matrix
+    # leg keeps covering the real library either way.
     import random
     import sys
     import types

@@ -1,6 +1,5 @@
 """Checkpointing: atomicity, rotation, crash debris, async, resume."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -1,19 +1,17 @@
 """The paper's analytical objects: Claims 1-2, partitioners, estimators,
 token-bucket capacity — unit + hypothesis property tests."""
-import math
 
 import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core.capacity import BurstableNode, burstable_split, solve_finish_time
+from repro.core.capacity import BurstableNode, burstable_split
 from repro.core.estimators import (
     ARSpeedEstimator, FudgeFactorLearner, normalized, synchronization_delay,
 )
 from repro.core.hdfs_model import overlap_pmf, p_diff_block, p_same_block
 from repro.core.partitioner import (
-    even_split, hemt_split_floats, makespan, optimal_makespan,
-    proportional_split, split_error,
+    even_split, hemt_split_floats, makespan, optimal_makespan, proportional_split,
 )
 from repro.core.straggler import claim1_bound, verify_claim1
 

@@ -7,7 +7,6 @@ oracle on completion, idle time, per-node finishes and per-task records to
 1e-9.  Plus closed-form/event-path equivalence, tie-breaking, cursor
 exactness, and the idle-time accounting fix.
 """
-import math
 
 import numpy as np
 import pytest
@@ -677,8 +676,9 @@ def test_pull_hetero_batched_engages_on_blocky_works():
     got = _pull_hetero_try_batched([0.01, 0.02], [1.0, 0.5], blocky, 0.0,
                                    False)
     assert got is not None
-    node_end, counts, per_task = got
+    node_end, counts, wsums, per_task = got
     assert per_task is None and sum(counts) == len(blocky)
+    assert sum(wsums) == pytest.approx(float(np.sum(blocky)), rel=1e-9)
     # continuous draws (run length 1) and degenerate zero periods decline
     distinct = rng.uniform(0.1, 2.0, 200)
     assert _pull_hetero_try_batched([0.01, 0.02], [1.0, 0.5], distinct,

@@ -1,0 +1,112 @@
+"""Direct coverage for ARSpeedEstimator (cold-start modes, forget) and
+FudgeFactorLearner.probe — previously only exercised through scheduler
+tests."""
+import pytest
+
+from repro.core.estimators import (
+    ARSpeedEstimator, FudgeFactorLearner, estimate_quality, normalized,
+)
+
+
+def _warm(est):
+    est.observe("a", 4.0, 2.0)     # 2.0
+    est.observe("b", 3.0, 6.0)     # 0.5
+    return est
+
+
+# --------------------------------------------------------------------------
+# cold-start fill rules (paper §5.1: v_i = v-bar for i in L_k^o)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,fill", [("mean", 1.25), ("min", 0.5),
+                                       ("max", 2.0)])
+def test_cold_start_modes_fill_unseen_executors(mode, fill):
+    est = _warm(ARSpeedEstimator(alpha=0.0, cold_start=mode))
+    assert est.speeds(["a", "b", "new"]) == pytest.approx([2.0, 0.5, fill])
+
+
+def test_cold_start_with_no_observations_fills_one():
+    est = ARSpeedEstimator()
+    assert est.speeds(["x", "y"]) == [1.0, 1.0]
+    assert est.known() == {}
+    assert est.speed("x") is None
+
+
+def test_cold_start_mode_validated():
+    with pytest.raises(ValueError, match="mean|min|max"):
+        ARSpeedEstimator(cold_start="median")
+    with pytest.raises(ValueError, match="alpha"):
+        ARSpeedEstimator(alpha=1.0)
+    with pytest.raises(ValueError, match="alpha"):
+        ARSpeedEstimator(alpha=-0.1)
+
+
+# --------------------------------------------------------------------------
+# AR(1) update + first-observation rule
+# --------------------------------------------------------------------------
+
+def test_first_observation_overrides_cold_fill():
+    est = _warm(ARSpeedEstimator(alpha=0.5))
+    # "c" currently reads as the mean fill; its FIRST direct observation
+    # must be taken whole (paper k=1 rule), not smoothed against the fill
+    assert est.speeds(["c"]) == [1.25]
+    est.observe("c", 9.0, 3.0)
+    assert est.speed("c") == pytest.approx(3.0)
+    # second observation: (1 - alpha) * sample + alpha * old
+    est.observe("c", 1.0, 1.0)
+    assert est.speed("c") == pytest.approx(0.5 * 1.0 + 0.5 * 3.0)
+
+
+def test_observe_many_and_elapsed_validation():
+    est = ARSpeedEstimator()
+    est.observe_many({"a": (2.0, 1.0), "b": (1.0, 4.0)})
+    assert est.known() == pytest.approx({"a": 2.0, "b": 0.25})
+    with pytest.raises(ValueError, match="elapsed"):
+        est.observe("a", 1.0, 0.0)
+
+
+def test_forget_drops_executor_and_cold_start_refills():
+    est = _warm(ARSpeedEstimator())
+    est.forget("a")
+    assert est.speed("a") is None
+    # the fill now comes from the survivors only
+    assert est.speeds(["a"]) == [0.5]
+    est.forget("zzz")               # unknown executor: no-op, no raise
+    est.forget("b")
+    assert est.speeds(["a", "b"]) == [1.0, 1.0]
+
+
+# --------------------------------------------------------------------------
+# fudge factor (§6.2)
+# --------------------------------------------------------------------------
+
+def test_fudge_probe_learns_and_smooths():
+    f = FudgeFactorLearner(advertised=0.4, smoothing=0.25)
+    assert f.effective == 0.4       # nothing probed yet
+    assert f.probe(10.0, 3.2) == pytest.approx(0.32)
+    assert f.effective == pytest.approx(0.32)
+    # exponential smoothing toward the new measurement
+    assert f.probe(10.0, 4.0) == pytest.approx(0.75 * 0.32 + 0.25 * 0.40)
+
+
+def test_fudge_probe_validates_rates():
+    f = FudgeFactorLearner(advertised=0.4)
+    with pytest.raises(ValueError, match="positive"):
+        f.probe(0.0, 1.0)
+    with pytest.raises(ValueError, match="positive"):
+        f.probe(1.0, -2.0)
+    assert f.effective == 0.4       # failed probes leave no trace
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def test_normalized_and_estimate_quality():
+    assert normalized([1.0, 3.0]) == pytest.approx([0.25, 0.75])
+    with pytest.raises(ValueError):
+        normalized([0.0, 0.0])
+    with pytest.raises(ValueError):
+        normalized([1.0, -1.0])
+    assert estimate_quality([1.0, 1.0], [1.0, 1.0]) == 0.0
+    assert estimate_quality([2.0, 2.0], [1.0, 3.0]) == pytest.approx(0.5)

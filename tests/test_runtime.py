@@ -7,12 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ArchBundle, TrainConfig, get_bundle, get_reduced
+from repro.configs import ArchBundle, TrainConfig, get_reduced
 from repro.core.planner import GrainPlanner, WorkStealingQueue
 from repro.data.grains import plan_grain_ranges
 from repro.data.pipeline import SyntheticCorpus
 from repro.optim.compression import (
-    CompressionState, compress_decompress, compression_init, wire_bytes,
+    compress_decompress, compression_init, wire_bytes,
 )
 from repro.runtime.elastic import replan, scale_event_log
 from repro.runtime.ft import FleetMonitor, Heartbeat

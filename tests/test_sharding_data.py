@@ -4,7 +4,6 @@ import pytest
 from hypothesis import given, strategies as st
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_bundle, get_reduced

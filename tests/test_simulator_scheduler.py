@@ -9,7 +9,7 @@ from repro.core.scheduler import (
     MultiStageJob, ProvisionedHeMTScheduler,
 )
 from repro.core.simulator import (
-    SimNode, SimTask, hemt_job, homt_job, run_pull_stage, run_static_stage,
+    SimNode, SimTask, run_pull_stage, run_static_stage,
 )
 from repro.core.skewed_hash import (
     bucket_of, expected_shares, integer_capacities, skewed_shuffle_counts,
