@@ -1,0 +1,124 @@
+"""Claim 2 x mitigation cross experiment: I/O-aware speculation & stealing
+through the flow-shared uplink (paper §3 Claim 2, §8 mitigation survey;
+``repro.core.speculation`` I/O-aware duplicates).
+
+One scenario, the paper's two failure axes at once: a shuffle stage whose
+input sits behind a shared datanode uplink (Claim 2's contention regime)
+on a cluster whose capacity estimates went stale (one node degraded to a
+quarter speed after the HeMT split was learned).  Variants on identical
+stages:
+
+* **homt_io**: fine microtasks through the shared queue.  Pull
+  self-balances the straggler away, but every microtask pays the launch
+  overhead and adds a concurrent same-block reader — the tiny-tasks
+  granularity tax the paper's Claim 2 quantifies, and at this overhead the
+  worst policy of the sweep.
+* **hemt_io**: stale even macrotasks, unmitigated.  The straggler strands
+  a quarter of the work; everything waits at the barrier.
+* **hemt_io_spec / hemt_io_spec_replica**: the same stale split rescued by
+  a speculative copy that must RE-FETCH the straggler's input as a new
+  flow through the uplink model (same datanode vs ring-adjacent replica
+  placement, ``repro.core.hdfs_model.DuplicatePlacement``).
+* **hemt_io_steal**: work stealing; the thief re-fetches the stolen
+  range's byte share.
+
+The paper-predicted ordering — mitigated < stale unmitigated HeMT < HomT —
+is returned by ``scenario_completions`` and pinned by the tier-1 suite
+(tests/test_speculation_io.py); the timed rows land in the
+``speculation_io`` section of BENCH_sim.json and are gated by ``run.py
+--check`` alongside the sim_engine rows.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import BenchRow, timed
+from repro.core.engine import (
+    PullSpec, StaticSpec, run_job, run_job_cache_clear,
+)
+from repro.core.hdfs_model import DuplicatePlacement
+from repro.core.simulator import SimNode
+from repro.core.speculation import SpeculativeCopies, WorkStealing
+
+TOTAL_WORK = 16.0
+IO_TOTAL_MB = 32.0          # stage input behind the shared uplink
+UPLINK_BW = 4.0             # MB/s per datanode uplink
+DATANODE = 0
+OVERHEAD = 0.6              # the tiny-tasks regime where HomT's tax bites
+N_MICRO = 128               # HomT microtask count
+STAGES = 3                  # stages per job (mitigation compounds)
+
+SPEC = SpeculativeCopies(quantile=0.75, factor=1.2, min_completed=1)
+SPEC_REPLICA = SpeculativeCopies(quantile=0.75, factor=1.2, min_completed=1,
+                                 placement=DuplicatePlacement("replica", 2))
+STEAL = WorkStealing(grain=0.25)
+
+
+def _stale_nodes() -> List[SimNode]:
+    """Estimates said [1, 1, 1, 1]; one node has since degraded to 0.25."""
+    return [SimNode.constant(f"n{i}", s, OVERHEAD)
+            for i, s in enumerate([1.0, 1.0, 1.0, 0.25])]
+
+
+def _variants() -> Dict[str, List]:
+    even = (TOTAL_WORK / 4,) * 4
+    homt = PullSpec(n_tasks=N_MICRO, task_work=TOTAL_WORK / N_MICRO,
+                    io_mb=IO_TOTAL_MB / N_MICRO, datanode=DATANODE)
+    return {
+        "homt_io": [homt] * STAGES,
+        "hemt_io": [StaticSpec(works=even, io_mb=IO_TOTAL_MB,
+                               datanode=DATANODE)] * STAGES,
+        "hemt_io_spec": [StaticSpec(works=even, io_mb=IO_TOTAL_MB,
+                                    datanode=DATANODE,
+                                    mitigation=SPEC)] * STAGES,
+        "hemt_io_spec_replica": [StaticSpec(works=even, io_mb=IO_TOTAL_MB,
+                                            datanode=DATANODE,
+                                            mitigation=SPEC_REPLICA)
+                                 ] * STAGES,
+        "hemt_io_steal": [StaticSpec(works=even, io_mb=IO_TOTAL_MB,
+                                     datanode=DATANODE,
+                                     mitigation=STEAL)] * STAGES,
+    }
+
+
+def scenario_completions() -> Dict[str, float]:
+    """Completion time of the multi-stage job per policy variant."""
+    nodes = _stale_nodes()
+    out = {}
+    for name, specs in _variants().items():
+        run_job_cache_clear()
+        out[name] = run_job(nodes, specs, uplink_bw=UPLINK_BW).completion
+    return out
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    comps = {}
+    for name, specs in _variants().items():
+
+        def _solve(s=specs):
+            run_job_cache_clear()   # time the solve, not the LRU hit
+            return run_job(_stale_nodes(), s, uplink_bw=UPLINK_BW)
+
+        sched, us = timed(_solve, repeat=5)
+        comps[name] = sched.completion
+        out.append(BenchRow(
+            f"speculation_io/stale_{name}", us,
+            f"completion={sched.completion:.3f};stages={STAGES}"))
+    best = min(comps["hemt_io_spec"], comps["hemt_io_spec_replica"],
+               comps["hemt_io_steal"])
+    out.append(BenchRow(
+        "speculation_io/stale_ordering", 0.0,
+        f"mitigated_beats_stale={best < comps['hemt_io']};"
+        f"stale_beats_homt={comps['hemt_io'] < comps['homt_io']};"
+        f"best={min(comps, key=comps.get)}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,10 @@
 at 1k/10k/100k tasks (benchmarks.bench_sim_engine) and the kernel rows
 (benchmarks.bench_kernels) — so successive PRs can diff BENCH_sim.json.
 
-``--check [PATH]`` re-runs only the sim_engine rows and exits non-zero if
-any timed row regressed by more than the threshold against the committed
-baseline (or vanished from the fresh run) — the ROADMAP CI gate.  The
+``--check [PATH]`` re-runs only the gated sections — the sim_engine rows
+and the speculation_io rows — and exits non-zero if any timed row
+regressed by more than the threshold against the committed baseline (or
+vanished from the fresh run) — the ROADMAP CI gate.  The
 threshold defaults to 2x and can be overridden per environment —
 ``--threshold 4`` beats the ``BENCH_CHECK_THRESHOLD`` env var beats the
 default — because hardcoded headroom is wrong for noisy shared CI
@@ -38,6 +39,7 @@ MODULES = [
     "benchmarks.bench_fig18_pagerank",
     "benchmarks.bench_hemt_dp",
     "benchmarks.bench_speculation",
+    "benchmarks.bench_speculation_io",
     "benchmarks.bench_oa_hemt",
     "benchmarks.bench_sim_engine",
     "benchmarks.bench_kernels",
@@ -46,9 +48,16 @@ MODULES = [
 # modules whose rows land in the --json perf-trajectory file
 JSON_SECTIONS = {
     "benchmarks.bench_speculation": "speculation",
+    "benchmarks.bench_speculation_io": "speculation_io",
     "benchmarks.bench_oa_hemt": "oa_hemt",
     "benchmarks.bench_sim_engine": "sim",
     "benchmarks.bench_kernels": "kernels",
+}
+
+# sections the --check gate re-runs live and compares against the baseline
+GATED_SECTIONS = {
+    "sim": "benchmarks.bench_sim_engine",
+    "speculation_io": "benchmarks.bench_speculation_io",
 }
 
 DEFAULT_THRESHOLD = 2.0
@@ -108,9 +117,12 @@ def compare_rows(baseline_rows, fresh_rows,
 
 def run_check(baseline_path: str, fresh_rows=None,
               threshold: "float | None" = None) -> int:
-    """The ``--check`` CI gate: fresh sim_engine rows vs. the committed
-    baseline.  ``fresh_rows`` (dicts like ``BenchRow.as_dict``) can be
-    injected for tests; by default the sim_engine benchmarks run live.
+    """The ``--check`` CI gate: fresh rows of every gated section
+    (``GATED_SECTIONS``: sim_engine + speculation_io) vs. the committed
+    baseline.  ``fresh_rows`` can be injected for tests — either a dict
+    ``{section: [row dicts]}`` (only the given sections are compared) or
+    a plain list of ``BenchRow.as_dict`` dicts, compared as the ``sim``
+    section; by default the gated benchmarks run live.
     ``threshold=None`` resolves via :func:`resolve_threshold` (env var or
     the 2x default)."""
     threshold = resolve_threshold(threshold)
@@ -125,18 +137,28 @@ def run_check(baseline_path: str, fresh_rows=None,
               file=sys.stderr)
         return 1
     if fresh_rows is None:
-        from benchmarks import bench_sim_engine
-        fresh_rows = [r.as_dict() for r in bench_sim_engine.rows()]
-    msgs = compare_rows(baseline.get("sim", []), fresh_rows, threshold)
+        fresh_by = {}
+        for section, modname in GATED_SECTIONS.items():
+            mod = __import__(modname, fromlist=["rows"])
+            fresh_by[section] = [r.as_dict() for r in mod.rows()]
+    elif isinstance(fresh_rows, dict):
+        fresh_by = fresh_rows
+    else:
+        fresh_by = {"sim": fresh_rows}
+    msgs = []
+    for section, fresh in fresh_by.items():
+        msgs.extend(compare_rows(baseline.get(section, []), fresh,
+                                 threshold))
     for m in msgs:
         print(f"REGRESSION {m}", file=sys.stderr)
     if msgs:
-        print(f"{len(msgs)} sim_engine row(s) regressed vs {baseline_path}",
+        print(f"{len(msgs)} gated row(s) regressed vs {baseline_path}",
               file=sys.stderr)
         return 1
-    n_timed = sum(1 for r in baseline.get("sim", [])
+    n_timed = sum(1 for section in fresh_by
+                  for r in baseline.get(section, [])
                   if r.get("us_per_call", 0.0) > 0.0)
-    print(f"OK: {n_timed} timed sim_engine row(s) within {threshold:g}x "
+    print(f"OK: {n_timed} timed gated row(s) within {threshold:g}x "
           f"of {baseline_path}")
     return 0
 
@@ -153,8 +175,9 @@ def main() -> None:
                              "bare word after --json is taken as the path)")
     parser.add_argument("--check", nargs="?", const="BENCH_sim.json",
                         default=None, metavar="PATH",
-                        help="re-run the sim_engine rows and exit non-zero "
-                             "on us_per_call regressions beyond the "
+                        help="re-run the gated rows (sim_engine + "
+                             "speculation_io) and exit non-zero on "
+                             "us_per_call regressions beyond the "
                              "threshold vs the given baseline JSON "
                              "(default: BENCH_sim.json)")
     parser.add_argument("--threshold", type=float, default=None,

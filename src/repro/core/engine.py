@@ -83,10 +83,17 @@ for differential tests:
    clusters, so the solve caches still apply).  Barrier-level
    :class:`ReskewHandoff` is applied by ``run_job`` itself: stragglers of
    a static stage are cut at ``cutoff_factor * median`` finish and their
-   residual work is folded into the next stage's split.  Mitigated stages
-   must be CPU-governed (effective I/O raises ``ValueError``).  Exact
+   residual work is folded into the next stage's split.  Stages with
+   effective I/O are mitigated too: a speculative copy or stolen
+   remainder re-fetches its input as a *new flow* through the
+   flow-shared uplink (placement chosen by
+   :class:`~repro.core.hdfs_model.DuplicatePlacement` — same datanode or
+   the ring-adjacent replica), joining the incremental per-datanode
+   repricing; cancelling the loser frees its flow and reprices the
+   survivors causally at that instant, never retroactively.  Exact
    event semantics live in the ``speculation`` module docstring;
-   differential tests pin the engine against a naive per-event oracle.
+   differential tests pin the engine against naive per-event oracles
+   (tests/test_speculation.py, tests/test_speculation_io.py).
 
 5. **Online adaptation** (:class:`AdaptivePlan`): the paper's full §5
    OA-HeMT loop at ``run_job`` scale.  ``run_job(..., adaptive=plan)``
@@ -227,11 +234,14 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
     re-launch, and idle-recheck events on top of the completion calendar.
     Exact semantics (offer instants, fixpoint order, tie resolution, steal
     granularity) are specified in the ``repro.core.speculation`` module
-    docstring and pinned by the differential oracle in
-    tests/test_speculation.py.  Mitigated stages must be CPU-governed: a
-    stage with effective I/O raises ``ValueError``.  A node whose only
-    attempts were cancelled produces no record and keeps its previous
-    ``node_finish`` (it completed nothing).
+    docstring and pinned by the differential oracles in
+    tests/test_speculation.py and tests/test_speculation_io.py.  On stages
+    with effective I/O a duplicate launch (speculative copy / stolen
+    remainder) re-fetches its input as a *new flow* through the same
+    per-datanode repricing primary readers use; cancelling the loser frees
+    its flow and reprices the survivors causally at that instant.  A node
+    whose only attempts were cancelled produces no record and keeps its
+    previous ``node_finish`` (it completed nothing).
     """
     n = len(nodes)
     shared = deque(queues[0]) if pull else None
@@ -245,14 +255,20 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
             raise ValueError(
                 f"{type(mitigation).__name__} is not an event-level policy "
                 "(barrier-level ReskewHandoff applies through run_job)")
-        if bw is not None and any(_io_active(q, bw) for q in queues):
-            raise ValueError("mitigation requires a CPU-governed stage "
-                             "(no effective I/O)")
+        pl = getattr(mitigation, "placement", None)
+        if pl is not None and pl.policy == "replica" and bw is not None:
+            top = max((t.datanode for q in queues for t in q), default=-1)
+            if top >= pl.n_datanodes:
+                raise ValueError(
+                    f"replica placement ring (n_datanodes="
+                    f"{pl.n_datanodes}) does not cover datanode {top}")
 
     task: List[Optional[SimTask]] = [None] * n
     t_started = [0.0] * n
     launch_at = [0.0] * n              # when the attempt's CPU work begins
     attempt_work = [0.0] * n           # work of the current attempt
+    attempt_io = [0.0] * n             # input bytes of the current attempt
+    #                                    (0 when I/O is not effective)
     cpu_done = [0.0] * n
     io_left = [0.0] * n
     io_rate = [0.0] * n
@@ -312,6 +328,7 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
         attempt_work[i] = tk.cpu_work
         cpu_done[i] = cursors[i].finish_time(tk.cpu_work, launch)
         if bw is not None and tk.datanode >= 0 and tk.io_mb > _EPS:
+            attempt_io[i] = tk.io_mb
             io_left[i] = tk.io_mb
             io_at[i] = now
             io_rate[i] = 0.0
@@ -319,8 +336,22 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
             readers.setdefault(tk.datanode, set()).add(i)
             reprice(tk.datanode, now)
         else:
+            attempt_io[i] = 0.0
             io_left[i] = 0.0
             push(cpu_done[i], i)
+
+    def drop_flow(i: int, now: float) -> None:
+        """Node i's in-flight flow ends early (cancelled loser / steal
+        drained the victim's remaining range): it leaves its datanode's
+        reader set and the survivors are repriced causally at ``now`` —
+        never retroactively."""
+        d = reading[i]
+        if d < 0:
+            return
+        reading[i] = -1
+        io_left[i] = 0.0
+        readers[d].discard(i)
+        reprice(d, now)
 
     def refill(i: int, now: float) -> None:
         if pull:
@@ -342,10 +373,13 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
             loser = twin[i]
             if loser >= 0:
                 # first finisher wins: cancel the racing copy (no record,
-                # no node_finish update — it completed nothing)
+                # no node_finish update — it completed nothing); its
+                # in-flight flow is freed and the survivors repriced at
+                # this instant
                 twin[i] = twin[loser] = -1
                 task[loser] = None
                 version[loser] += 1   # drop its pending completion event
+                drop_flow(loser, now)
         refill(i, now)
         if loser >= 0:
             refill(loser, now)
@@ -361,11 +395,17 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
         """Fixpoint mitigation sweep (speculation-module semantics): offer
         idle nodes in ascending index; restart after each accepted action;
         schedule idle rechecks once no action is taken."""
+        placement = getattr(mitigation, "placement", None)
+
+        def dup_datanode(d: int) -> int:
+            return d if placement is None else placement.choose(d)
+
         while True:
             running = [RunningAttempt(k, task[k].task_id, t_started[k],
                                       attempt_work[k],
                                       remaining_work(k, now),
-                                      task[k].task_id in copied)
+                                      task[k].task_id in copied,
+                                      attempt_io[k])
                        for k in range(n) if task[k] is not None]
             if not running:
                 return
@@ -382,20 +422,45 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
                 victim = by_node[act.victim]
                 vt = task[act.victim]
                 if isinstance(act, Speculate):
-                    # duplicate launch: full original work, from scratch
+                    # duplicate launch: full original work, from scratch;
+                    # with effective I/O the copy re-fetches the full
+                    # input as a new flow from the placement-chosen
+                    # datanode (start_task joins it to the reader set and
+                    # reprices that uplink)
                     copied.add(vt.task_id)
-                    start_task(k, SimTask(vt.cpu_work, task_id=vt.task_id),
-                               now)
+                    start_task(k, SimTask(vt.cpu_work, vt.io_mb,
+                                          dup_datanode(vt.datanode),
+                                          task_id=vt.task_id), now)
                     twin[k] = act.victim
                     twin[act.victim] = k
                 else:                 # Steal: shrink the victim in place
-                    attempt_work[act.victim] -= act.amount
-                    t0 = max(now, launch_at[act.victim])
-                    cpu_done[act.victim] = cursors[act.victim].finish_time(
+                    v = act.victim
+                    moved = 0.0       # input bytes of the stolen range
+                    if attempt_io[v] > _EPS and victim.work > 0.0:
+                        moved = attempt_io[v] * act.amount / victim.work
+                        attempt_io[v] -= moved
+                    attempt_work[v] -= act.amount
+                    t0 = max(now, launch_at[v])
+                    cpu_done[v] = cursors[v].finish_time(
                         victim.remaining - act.amount, t0)
-                    push(cpu_done[act.victim], act.victim)
-                    start_task(k, SimTask(act.amount, task_id=vt.task_id),
-                               now)
+                    if reading[v] >= 0 and moved > 0.0:
+                        # the victim stops fetching the stolen range:
+                        # checkpoint its flow at the steal instant, drop
+                        # the moved bytes (clamped — bytes it already
+                        # streamed are not refunded)
+                        left = io_left[v] - io_rate[v] * (now - io_at[v])
+                        io_left[v] = max(0.0, max(left, 0.0) - moved)
+                        io_at[v] = now
+                        if io_left[v] <= _EPS:
+                            drop_flow(v, now)
+                        else:
+                            push(now + io_left[v] / io_rate[v], v)
+                    if reading[v] < 0:
+                        push(cpu_done[v], v)
+                    start_task(k, SimTask(act.amount, moved,
+                                          dup_datanode(vt.datanode)
+                                          if moved > _EPS else -1,
+                                          task_id=vt.task_id), now)
                 acted = True
                 break                 # state changed: restart the sweep
             if not acted:
@@ -433,6 +498,8 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
             reprice(d, t)
             if t + _EPS >= cpu_done[i]:
                 finish(i, t)
+                if mitigation is not None:
+                    offer_mitigation(t)
             else:
                 push(cpu_done[i], i)
         elif t + _EPS >= cpu_done[i]:
@@ -927,13 +994,31 @@ class StaticSpec:
     one ``SimTask`` per node).  ``mitigation`` accepts event-level policies
     (applied while the stage runs) or barrier-level ReskewHandoff (applied
     by ``run_job`` at this stage's barrier: stragglers are cut and their
-    residual work folds into the next stage's split)."""
+    residual work folds into the next stage's split).
+
+    Optional I/O (the Claim 2 x mitigation cross setting): ``io_mb`` is the
+    stage's TOTAL input, split across macrotasks proportionally to
+    ``works`` (evenly when every work is zero) and read from ``datanode``
+    through the flow-shared uplink.  Stages with effective I/O solve on
+    the event calendar; mitigated ones launch duplicate readers there."""
     works: Tuple[float, ...]
     mitigation: Optional[object] = None
+    io_mb: float = 0.0
+    datanode: int = -1
 
     def __post_init__(self):
         object.__setattr__(self, "works",
                            tuple(float(w) for w in self.works))
+
+    def io_split(self) -> Tuple[float, ...]:
+        """Per-node input bytes: ``io_mb`` proportional to ``works``."""
+        n = len(self.works)
+        if self.io_mb <= 0.0 or self.datanode < 0 or n == 0:
+            return (0.0,) * n
+        total = sum(self.works)
+        if total <= 0.0:
+            return (self.io_mb / n,) * n
+        return tuple(self.io_mb * w / total for w in self.works)
 
 
 @dataclass
@@ -1012,7 +1097,10 @@ def _rel_summary_from_result(res: StageResult, names: Sequence[str],
 def _spec_tasks(spec) -> Sequence[Sequence[SimTask]]:
     """Materialize a spec into engine queues (the event-path fallback)."""
     if isinstance(spec, StaticSpec):
-        return [[SimTask(w, task_id=i)] for i, w in enumerate(spec.works)]
+        ios = spec.io_split()
+        return [[SimTask(w, ios[i], spec.datanode if ios[i] > 0.0 else -1,
+                         task_id=i)]
+                for i, w in enumerate(spec.works)]
     return [[SimTask(float(w), spec.io_mb, spec.datanode, task_id=k)
              for k, w in enumerate(spec.work_array())]]
 
@@ -1022,8 +1110,10 @@ def _rel_summary(nodes: Sequence[SimNode], speeds: Sequence[float],
     """Solve one stage spec at relative start 0 on a constant-speed
     cluster: (span, idle, per-node finish offsets, per-node counts,
     per-node executed works).  Stages with an event-level mitigation
-    policy run the mitigated event calendar (still start-invariant on
-    constant speeds, so the solve stays shiftable and cacheable)."""
+    policy — I/O or not — run the mitigated event calendar: flow sharing,
+    elapsed-time triggers and placement are all relative to the stage
+    start, so the solve is still start-invariant on constant speeds and
+    stays shiftable and cacheable."""
     oh = [nd.task_overhead for nd in nodes]
     n = len(nodes)
     if is_event_policy(spec.mitigation):
@@ -1033,6 +1123,11 @@ def _rel_summary(nodes: Sequence[SimNode], speeds: Sequence[float],
                                mitigation=spec.mitigation)
         return _rel_summary_from_result(res, [nd.name for nd in nodes], 0.0)
     if isinstance(spec, StaticSpec):
+        if uplink_bw and spec.io_mb > _EPS and spec.datanode >= 0:
+            res = run_stage_events(nodes, _spec_tasks(spec), pull=False,
+                                   uplink_bw=uplink_bw)
+            return _rel_summary_from_result(res, [nd.name for nd in nodes],
+                                            0.0)
         return _rel_summary_static(oh, speeds, spec)
     works = spec.works
     n_tasks = spec.n_tasks if works is None else len(works)
@@ -1139,7 +1234,8 @@ def _fold_spec(spec, residual: float, throughputs: Sequence[float]):
     if isinstance(spec, StaticSpec):
         return StaticSpec(works=tuple(fold_residual(spec.works, residual,
                                                     throughputs)),
-                          mitigation=spec.mitigation)
+                          mitigation=spec.mitigation,
+                          io_mb=spec.io_mb, datanode=spec.datanode)
     w = spec.work_array()
     total = float(w.sum())
     if total > 0.0:
@@ -1219,6 +1315,12 @@ class AdaptivePlan:
 
     def _split_with(self, speeds: Sequence[float], total: float,
                     ) -> List[float]:
+        n = len(speeds)
+        if not any(s > 0.0 for s in speeds):
+            # V = 0 (every executor cold/zero-speed at this barrier):
+            # d_i = D v_i / V is 0/0 — fall back to the even split instead
+            # of dividing by zero (the paper's k=1 rule is exactly this)
+            speeds = [1.0] * n
         if self.quantum is None:
             return hemt_split_floats(total, speeds)
         units = int(round(total / self.quantum))
@@ -1229,6 +1331,17 @@ class AdaptivePlan:
             # would strand the run mid-job on an internally-generated
             # total the caller never chose)
             units = int(total / self.quantum)
+        if units == 0 or units < self.min_units * n:
+            # Degenerate quantization: either D < quantum (no executor
+            # can receive a whole quantum, so largest-remainder rounding
+            # has nothing to round and the whole total would ride the
+            # fastest executor) or D holds fewer whole quanta than the
+            # min_units floor needs (a re-skew hand-off can fold an
+            # arbitrarily small residual into the next stage) — both
+            # cannot honor whole-grain proportional rounding, so split
+            # the total evenly instead of raising "min_share infeasible"
+            # mid-job on a total the caller never chose
+            return [total / n] * n
         remainder = total - units * self.quantum
         works = [float(u * self.quantum) for u in
                  proportional_split(units, speeds,
@@ -1252,7 +1365,8 @@ class AdaptivePlan:
             works = tuple(self._split_with(speeds, sum(spec.works)))
             self.history.append(
                 AdaptiveStageLog(k, works, tuple(speeds), True))
-            return StaticSpec(works=works, mitigation=spec.mitigation)
+            return StaticSpec(works=works, mitigation=spec.mitigation,
+                              io_mb=spec.io_mb, datanode=spec.datanode)
         works = spec.works if isinstance(spec, StaticSpec) else None
         self.history.append(AdaptiveStageLog(k, works, None, False))
         return spec

@@ -17,8 +17,53 @@ shard replicas ~ datanodes, concurrently-scheduled grains ~ readers.
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 
 import numpy as np
+
+
+@dataclass(frozen=True)
+class DuplicatePlacement:
+    """Which datanode a duplicate reader re-fetches its input from.
+
+    The mitigation subsystem (``repro.core.speculation``) launches
+    duplicate readers — a speculative copy re-fetching a straggler's full
+    input, or a steal thief re-fetching its stolen range — and each
+    duplicate opens a *new* flow through the flow-shared uplink model.
+    This policy decides where that flow lands:
+
+    * ``"same"`` (default): the duplicate re-reads the original datanode.
+      The new flow fairly shares that uplink with the primary reader — the
+      Claim 2 contention cost of duplicating a read, modelled exactly.
+    * ``"replica"``: the duplicate reads the block's next replica in a
+      deterministic replica ring of ``n_datanodes`` nodes: datanode
+      ``(d + 1) % n_datanodes``.  The probabilistic placement model above
+      (``overlap_pmf`` etc.) describes *expected* contention under random
+      placement; the simulated engine needs a deterministic choice, so we
+      pin the ring-adjacent replica — the best case the paper's p1 >= p2
+      argument allows, where the duplicate avoids the primary's uplink
+      entirely (unless another task's flow already lives there).
+
+    Frozen (hashable) so it can ride the frozen mitigation policies
+    through ``PullSpec``/``StaticSpec`` and the ``run_job`` solve caches.
+    """
+    policy: str = "same"        # "same" | "replica"
+    n_datanodes: int = 0        # replica ring size (required for "replica")
+
+    def __post_init__(self):
+        if self.policy not in ("same", "replica"):
+            raise ValueError(
+                f"placement policy must be 'same' or 'replica': {self.policy!r}")
+        if self.policy == "replica" and self.n_datanodes < 2:
+            raise ValueError("replica placement needs n_datanodes >= 2 "
+                             "(a 1-node ring has no distinct replica)")
+
+    def choose(self, datanode: int) -> int:
+        """Datanode the duplicate flow reads from (no-op for tasks
+        without I/O, ``datanode < 0``)."""
+        if datanode < 0 or self.policy == "same":
+            return datanode
+        return (datanode + 1) % self.n_datanodes
 
 
 def overlap_pmf(n: int, r: int, v: int) -> float:

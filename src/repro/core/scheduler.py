@@ -128,15 +128,29 @@ class AdaptiveHeMTScheduler:
 
     # -- simulation driver ---------------------------------------------------
     def run_simulated_sequence(self, node_factory: Callable[[int], List[SimNode]],
-                               n_jobs: int, total_work: float) -> List[JobResult]:
+                               n_jobs: int, total_work: float,
+                               io_mb_total: float = 0.0,
+                               uplink_bw: Optional[float] = None,
+                               datanode: int = 0) -> List[JobResult]:
         """Run n_jobs jobs; node_factory(k) returns the cluster as it exists
         at job k (speed profiles relative to job start — lets benchmarks
-        inject interference at chosen job indices, paper Fig 7)."""
+        inject interference at chosen job indices, paper Fig 7).
+
+        ``io_mb_total`` + ``uplink_bw`` put each job's input behind the
+        flow-shared uplink of ``datanode`` (macrotasks read a
+        works-proportional share): with an I/O-aware mitigation policy,
+        stale-estimate stragglers are rescued by duplicate readers
+        re-fetching through the same uplink (the Claim 2 x mitigation
+        cross setting)."""
         for k in range(n_jobs):
             nodes = node_factory(k)
             split = self.plan(total_work)
-            assignments = [[SimTask(w, task_id=i)] for i, w in enumerate(split)]
-            res = run_static_stage(nodes, assignments,
+            assignments = [
+                [SimTask(w, io_mb_total * w / total_work if io_mb_total > 0
+                         else 0.0,
+                         datanode if io_mb_total > 0 else -1, task_id=i)]
+                for i, w in enumerate(split)]
+            res = run_static_stage(nodes, assignments, uplink_bw=uplink_bw,
                                    mitigation=self.mitigation)
             per_node_elapsed = [res.node_finish[nd.name] for nd in nodes]
             if self.mitigation is not None:
@@ -233,8 +247,23 @@ class BurstableHeMTScheduler:
 @dataclass
 class MultiStageJob:
     """stages: list of per-stage total work; between stages data is shuffled
-    by either an even or a capacity-skewed partitioner (Algorithm 1)."""
+    by either an even or a capacity-skewed partitioner (Algorithm 1).
+
+    ``stage_io_mb`` (optional, one total per stage) makes each stage read
+    its input from ``datanode`` through the flow-shared uplink: HomT
+    microtasks each fetch an even share, HeMT macrotasks a
+    works-proportional share (``StaticSpec.io_mb`` semantics).  Pass
+    ``uplink_bw`` to :meth:`run` to make the I/O effective — the Claim 2 x
+    mitigation cross setting, where duplicate readers re-fetch through the
+    same shared uplink."""
     stage_works: List[float]
+    stage_io_mb: Optional[List[float]] = None
+    datanode: int = 0
+
+    def _stage_io(self, k: int) -> float:
+        if self.stage_io_mb is None:
+            return 0.0
+        return self.stage_io_mb[k]
 
     def specs(self, weights: Optional[Sequence[float]],
               n_tasks_per_stage: Optional[int] = None,
@@ -248,16 +277,23 @@ class MultiStageJob:
         if weights is None:
             return [PullSpec(n_tasks=n_tasks_per_stage,
                              task_work=w / n_tasks_per_stage,
+                             io_mb=self._stage_io(k) / n_tasks_per_stage,
+                             datanode=self.datanode if self._stage_io(k) > 0
+                             else -1,
                              mitigation=mitigation)
-                    for w in self.stage_works]
+                    for k, w in enumerate(self.stage_works)]
         norm = sum(weights)
         return [StaticSpec(works=tuple(w * wi / norm for wi in weights),
-                           mitigation=mitigation)
-                for w in self.stage_works]
+                           mitigation=mitigation,
+                           io_mb=self._stage_io(k),
+                           datanode=self.datanode if self._stage_io(k) > 0
+                           else -1)
+                for k, w in enumerate(self.stage_works)]
 
     def run(self, nodes: Sequence[SimNode], weights: Optional[Sequence[float]],
             n_tasks_per_stage: Optional[int] = None, records: bool = False,
-            mitigation=None, adaptive=None) -> Tuple[float, List]:
+            mitigation=None, adaptive=None,
+            uplink_bw: Optional[float] = None) -> Tuple[float, List]:
         """weights=None -> HomT with n_tasks_per_stage; else HeMT skewed.
 
         Thin wrapper over ``engine.run_job``: per-node finish vectors are
@@ -269,6 +305,8 @@ class MultiStageJob:
         ``adaptive`` (an :class:`~repro.core.engine.AdaptivePlan`) re-plans
         each HeMT stage's split at its barrier from AR(1)-learned speeds —
         the paper's OA-HeMT loop riding the same run_job call.
+        ``uplink_bw`` activates the flow-shared I/O model for stages with
+        ``stage_io_mb`` input (both spec and records paths).
         """
         if records:
             from repro.core.speculation import ReskewHandoff
@@ -285,17 +323,23 @@ class MultiStageJob:
                     "event-level policy")
             t, results = 0.0, []
             norm = None if weights is None else sum(weights)
-            for w in self.stage_works:
+            for k, w in enumerate(self.stage_works):
+                io = self._stage_io(k)
+                dn = self.datanode if io > 0 else -1
                 if weights is None:
                     per = w / n_tasks_per_stage
-                    tasks = [SimTask(per, task_id=i)
+                    tasks = [SimTask(per, io / n_tasks_per_stage, dn,
+                                     task_id=i)
                              for i in range(n_tasks_per_stage)]
                     res = run_pull_stage(nodes, tasks, start_time=t,
+                                         uplink_bw=uplink_bw,
                                          mitigation=mitigation)
                 else:
-                    assignments = [[SimTask(w * wi / norm, task_id=i)]
+                    assignments = [[SimTask(w * wi / norm, io * wi / norm,
+                                            dn, task_id=i)]
                                    for i, wi in enumerate(weights)]
                     res = run_static_stage(nodes, assignments, start_time=t,
+                                           uplink_bw=uplink_bw,
                                            mitigation=mitigation)
                 results.append(res)
                 t = res.completion  # program barrier between stages
@@ -303,5 +347,5 @@ class MultiStageJob:
         from repro.core.engine import run_job
         sched = run_job(nodes, self.specs(weights, n_tasks_per_stage,
                                           mitigation=mitigation),
-                        adaptive=adaptive)
+                        uplink_bw=uplink_bw, adaptive=adaptive)
         return sched.completion, sched.stages

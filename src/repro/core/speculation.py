@@ -63,23 +63,55 @@ oracle in tests/test_speculation.py):
   homogeneous finishes the cutoff sits at/above the max finish and the
   policy is a no-op.
 
-Mitigation is defined for CPU-governed stages: a stage with effective I/O
-(finite shared uplink and at least one reading task) raises ``ValueError``
-— duplicate readers would need a flow-model story the paper does not
-specify.
+* **I/O-aware duplicates** (stages with effective I/O — finite shared
+  uplink and at least one reading task): a duplicate launch must re-fetch
+  its input, and it does so as a **new flow** through the engine's
+  flow-shared uplink model, joining the same incremental per-datanode
+  repricing primary readers use.  The semantics, shared by engine and
+  oracle:
+
+  - A **speculative copy** re-fetches the victim attempt's **full input
+    bytes** from the datanode its
+    :class:`~repro.core.hdfs_model.DuplicatePlacement` chooses (default:
+    the original datanode, fairly sharing its uplink with the primary
+    flow; ``"replica"`` reads the ring-adjacent replica instead).  The
+    copy completes when both its re-fetch and its CPU work are done.
+  - A **stolen remainder** re-fetches the stolen range's bytes — the
+    ``amount / attempt work`` fraction of the attempt's input — from the
+    placement-chosen datanode, and the victim stops fetching that range:
+    its remaining bytes shrink by the moved bytes, clamped at zero (bytes
+    it already streamed past the retained range are not refunded — the
+    engine charges duplicate reads, never negative ones).  A drained
+    victim flow leaves its uplink at the steal instant.
+  - **Cancelling the loser frees its flow**: at the winner's completion
+    instant the losing attempt's in-flight flow (if any) leaves its
+    datanode's reader set and the survivors are repriced **causally at
+    that instant — never retroactively** (the soundness property the
+    engine's incremental repricing maintains everywhere).
+  - The speculation **trigger gains an I/O cost term**: an attempt with
+    input bytes crosses threshold at ``elapsed >= factor *
+    quantile(done) + io_cost_per_mb * attempt_io_mb`` — a copy is only
+    launched when the straggler is late enough that paying the re-fetch
+    can still win.  ``io_cost_per_mb`` (seconds per MB, default 0)
+    estimates the re-fetch rate; idle re-checks use the same per-attempt
+    threshold.  Completed durations already include I/O time (durations
+    are wall-clock ``finish - start``).
 
 Policies are frozen (hashable) dataclasses so they can ride the hashable
 ``PullSpec``/``StaticSpec`` stage specs through ``run_job``'s solve caches.
-The runtime monitor (``repro.runtime.ft.FleetMonitor``) and the legacy
-helper ``repro.core.straggler.speculative_copies`` reuse
-:meth:`SpeculativeCopies.should_speculate` for advisory (non-simulated)
-speculation decisions, so simulation and runtime share one trigger rule.
+The runtime monitor (``repro.runtime.ft.FleetMonitor``), the legacy
+helper ``repro.core.straggler.speculative_copies``, and the engine all
+share :meth:`SpeculativeCopies.should_speculate` — one at-threshold
+(``>=``) trigger rule, so a task running exactly ``factor * quantile``
+gets the same verdict from every exposure.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
 from typing import List, NamedTuple, Optional, Sequence, Union
+
+from repro.core.hdfs_model import DuplicatePlacement
 
 
 class RunningAttempt(NamedTuple):
@@ -91,6 +123,8 @@ class RunningAttempt(NamedTuple):
     work: float         # total work of this attempt
     remaining: float    # work not yet executed at the offer instant
     has_copy: bool      # a speculative copy of this task exists/existed
+    io_mb: float = 0.0  # the attempt's input bytes (0 when I/O is not
+    #                     effective: infinite uplink or no datanode)
 
 
 class Speculate(NamedTuple):
@@ -107,6 +141,15 @@ class Steal(NamedTuple):
 
 
 Action = Union[Speculate, Steal]
+
+# At-threshold float guard: idle re-checks are scheduled at the exact
+# crossing instant ``start + threshold``, and at a nonzero absolute start
+# the round-trip ``(start + thr) - start`` can round a hair BELOW ``thr`` —
+# the trigger would miss, no further re-check would be scheduled, and a
+# shifted solve would silently diverge from its relative-0 twin (breaking
+# the start-invariance run_job's solve caches rely on).  The guard mirrors
+# the engine event loop's ``t + eps >= cpu_done`` causal comparisons.
+_EPS = 1e-9
 
 
 def quantile(values: Sequence[float], q: float) -> float:
@@ -129,10 +172,19 @@ class SpeculativeCopies:
     quantile:       which quantile of completed durations sets the baseline
     factor:         speculation threshold = factor * that quantile
     min_completed:  completions required before any copy may launch
+    io_cost_per_mb: re-fetch cost term (s/MB): an attempt with input bytes
+                    only triggers once its elapsed time also covers the
+                    estimated cost of re-fetching its input (module
+                    docstring, I/O-aware duplicates)
+    placement:      where a copy re-fetches from
+                    (:class:`~repro.core.hdfs_model.DuplicatePlacement`;
+                    None = the original datanode)
     """
     quantile: float = 0.75
     factor: float = 1.5
     min_completed: int = 1
+    io_cost_per_mb: float = 0.0
+    placement: Optional[DuplicatePlacement] = None
 
     def __post_init__(self):
         if not 0.0 <= self.quantile <= 1.0:
@@ -141,17 +193,27 @@ class SpeculativeCopies:
             raise ValueError("factor must be positive")
         if self.min_completed < 1:
             raise ValueError("min_completed must be >= 1")
+        if self.io_cost_per_mb < 0.0:
+            raise ValueError("io_cost_per_mb must be >= 0")
 
-    def threshold(self, done_durations: Sequence[float]) -> float:
-        return self.factor * quantile(done_durations, self.quantile)
+    def threshold(self, done_durations: Sequence[float],
+                  io_mb: float = 0.0) -> float:
+        """Per-attempt trigger threshold: the quantile baseline plus the
+        re-fetch cost term for the attempt's input bytes."""
+        return (self.factor * quantile(done_durations, self.quantile)
+                + self.io_cost_per_mb * io_mb)
 
     def should_speculate(self, done_durations: Sequence[float],
-                         elapsed: float) -> bool:
-        """The shared trigger rule: enough completions and the attempt's
-        elapsed time at/over the threshold."""
+                         elapsed: float, io_mb: float = 0.0) -> bool:
+        """The shared trigger rule (engine, FleetMonitor and the legacy
+        ``straggler.speculative_copies`` helper all call this): enough
+        completions and the attempt's elapsed time at/over its per-attempt
+        threshold — ``>=`` with the module's 1e-9 float guard, so a task
+        running exactly ``factor * quantile`` triggers in every
+        exposure."""
         if len(done_durations) < self.min_completed:
             return False
-        return elapsed >= self.threshold(done_durations)
+        return elapsed + _EPS >= self.threshold(done_durations, io_mb)
 
     def offer(self, done_durations: Sequence[float],
               running: Sequence[RunningAttempt], now: float,
@@ -160,26 +222,27 @@ class SpeculativeCopies:
         lowest victim node index, via the ascending scan)."""
         if len(done_durations) < self.min_completed:
             return None
-        thr = self.threshold(done_durations)
         best, best_elapsed = None, -math.inf
         for r in running:                      # ascending node index
             if r.has_copy:
                 continue
             elapsed = now - r.start
-            if elapsed >= thr and elapsed > best_elapsed:
+            if (elapsed + _EPS >= self.threshold(done_durations, r.io_mb)
+                    and elapsed > best_elapsed):
                 best, best_elapsed = r, elapsed
         return None if best is None else Speculate(best.node)
 
     def next_check(self, done_durations: Sequence[float],
                    running: Sequence[RunningAttempt], now: float,
                    ) -> Optional[float]:
-        """Earliest future instant an eligible attempt crosses threshold
-        (None when nothing can: all copied, or too few completions —
-        completions themselves are events that re-offer)."""
+        """Earliest future instant an eligible attempt crosses its
+        per-attempt threshold (None when nothing can: all copied, or too
+        few completions — completions themselves are events that
+        re-offer)."""
         if len(done_durations) < self.min_completed:
             return None
-        thr = self.threshold(done_durations)
-        t = min((r.start + thr for r in running if not r.has_copy),
+        t = min((r.start + self.threshold(done_durations, r.io_mb)
+                 for r in running if not r.has_copy),
                 default=None)
         return t if t is not None and t > now else None
 
@@ -188,8 +251,11 @@ class SpeculativeCopies:
 class WorkStealing:
     """Idle-node work stealing, split at a grain boundary (module
     docstring).  ``grain`` is the indivisible work quantum (e.g. one HDFS
-    block / one microbatch in work units)."""
+    block / one microbatch in work units).  On stages with effective I/O
+    the thief re-fetches the stolen range's bytes as a new flow from the
+    ``placement``-chosen datanode (None = the victim's datanode)."""
     grain: float
+    placement: Optional[DuplicatePlacement] = None
 
     def __post_init__(self):
         if self.grain <= 0.0:

@@ -77,21 +77,23 @@ def speculative_copies(records_end: Dict[int, Optional[float]], now: float,
                        running_starts: Dict[int, float],
                        timeout_factor: float = 2.0) -> List[int]:
     """Opportunistic speculation (paper §8 survey, [45,6,5]): re-launch tasks
-    still running after timeout_factor x median completed duration.
+    still running at/over timeout_factor x median completed duration.
 
     Advisory twin of the engine-backed
     :class:`repro.core.speculation.SpeculativeCopies` policy (median =
-    quantile 0.5, strict-excess trigger preserved from the original
-    helper); the simulated path runs the policy inside
-    ``run_stage_events(mitigation=...)`` with cancel/re-launch events.
+    quantile 0.5), routed through the shared ``should_speculate`` rule so
+    a task running *exactly* ``timeout_factor * median`` gets the same
+    at-threshold (``>=``) verdict here, in
+    ``FleetMonitor.speculation_candidates``, and inside the engine's
+    ``run_stage_events(mitigation=...)`` cancel/re-launch events.
     """
     done = [e for e in records_end.values() if e is not None]
     if not done:
         return []
     policy = SpeculativeCopies(quantile=0.5, factor=timeout_factor,
                                min_completed=1)
-    thr = policy.threshold(done)
-    return [tid for tid, st in running_starts.items() if now - st > thr]
+    return [tid for tid, st in running_starts.items()
+            if policy.should_speculate(done, now - st)]
 
 
 def rebalance_after_loss(weights: Sequence[float], lost: Sequence[int],

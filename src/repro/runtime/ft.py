@@ -94,13 +94,19 @@ class FleetMonitor:
     def speculation_candidates(self, now: float,
                                done_durations: Sequence[float],
                                running_starts: Dict[str, float],
-                               ) -> List[str]:
-        """Tasks worth re-launching on an idle slice: running longer than
-        the policy threshold over completed durations (engine-shared
-        trigger; the paper's §8 opportunistic speculation)."""
+                               running_io_mb: Optional[Dict[str, float]]
+                               = None) -> List[str]:
+        """Tasks worth re-launching on an idle slice: running at/over the
+        policy threshold given completed durations (engine-shared
+        at-threshold trigger; the paper's §8 opportunistic speculation).
+        ``running_io_mb`` (input bytes per running task) feeds the
+        policy's re-fetch cost term — a copy that must re-read its input
+        is only advised once the straggler is late enough to cover it."""
         pol = self.speculation
+        io = running_io_mb or {}
         return [key for key, st in running_starts.items()
-                if pol.should_speculate(done_durations, now - st)]
+                if pol.should_speculate(done_durations, now - st,
+                                        io.get(key, 0.0))]
 
     def alive(self) -> List[str]:
         return [n for n in self.last_seen if n not in self._dead]

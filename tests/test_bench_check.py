@@ -117,6 +117,32 @@ def test_run_check_honors_env_threshold(tmp_path, capsys, monkeypatch):
     assert "REGRESSION" in capsys.readouterr().err
 
 
+def test_run_check_gates_speculation_io_section(tmp_path, capsys):
+    """The --check gate covers the speculation_io rows alongside
+    sim_engine: a regressed duplicate-reader row fails the gate; a
+    section absent from the baseline is ignored (transition PRs)."""
+    baseline = tmp_path / "BENCH_sim.json"
+    baseline.write_text(json.dumps({
+        "schema": 1, "sim": BASE,
+        "speculation_io": [_row("speculation_io/stale_hemt_io_spec", 100.0),
+                           _row("speculation_io/stale_ordering", 0.0)]}))
+    ok = {"sim": [_row("sim_engine/pull_10000", 900.0),
+                  _row("sim_engine/job_pull_10x1000", 500.0)],
+          "speculation_io": [_row("speculation_io/stale_hemt_io_spec", 150.0),
+                             _row("speculation_io/stale_ordering", 0.0)]}
+    assert run_check(str(baseline), fresh_rows=ok) == 0
+    bad = {**ok,
+           "speculation_io": [_row("speculation_io/stale_hemt_io_spec",
+                                   500.0)]}
+    assert run_check(str(baseline), fresh_rows=bad) == 1
+    err = capsys.readouterr().err
+    assert "stale_hemt_io_spec" in err and "REGRESSION" in err
+    # baseline without the section: nothing to gate there
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps({"schema": 1, "sim": BASE}))
+    assert run_check(str(bare), fresh_rows=ok) == 0
+
+
 def test_run_check_missing_or_bad_baseline(tmp_path, capsys):
     assert run_check(str(tmp_path / "nope.json"), fresh_rows=[]) == 1
     assert "cannot read baseline" in capsys.readouterr().err

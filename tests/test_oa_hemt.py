@@ -62,9 +62,12 @@ def naive_adaptive_job(nodes, specs, alpha=0.0, quantum=None, min_units=0,
         if carry is not None and works is not None and len(works):
             works = fold_residual(works, carry[0], carry[1])
             carry = None
-        # 2. re-plan from the estimator (paper §5.1 split)
+        # 2. re-plan from the estimator (paper §5.1 split; degenerate
+        #    guards restated: V = 0 -> even split, D < quantum -> even)
         if works is not None and est.known():
             speeds = est.speeds(names)
+            if not any(v > 0.0 for v in speeds):
+                speeds = [1.0] * len(names)
             total = sum(works)
             if quantum is None:
                 works = [total * v / sum(speeds) for v in speeds]
@@ -72,13 +75,16 @@ def naive_adaptive_job(nodes, specs, alpha=0.0, quantum=None, min_units=0,
                 units = int(round(total / quantum))
                 if abs(units * quantum - total) > 1e-9 * max(1.0, total):
                     units = int(total / quantum)
-                works = [u * quantum for u in
-                         proportional_split(units, speeds,
-                                            min_share=min_units)]
-                rem = total - units * quantum
-                if rem > 0.0:
-                    works[max(range(len(works)),
-                              key=lambda i: speeds[i])] += rem
+                if units == 0 or units < min_units * len(names):
+                    works = [total / len(names)] * len(names)
+                else:
+                    works = [u * quantum for u in
+                             proportional_split(units, speeds,
+                                                min_share=min_units)]
+                    rem = total - units * quantum
+                    if rem > 0.0:
+                        works[max(range(len(works)),
+                                  key=lambda i: speeds[i])] += rem
         # 3. solve the stage at its true absolute start
         if works is not None:
             queues = [[SimTask(w, task_id=i)] for i, w in enumerate(works)]
@@ -333,6 +339,77 @@ def test_adaptive_quantum_with_reskew_residual_does_not_crash():
     residual = 8.0 - sum(sched.stages[0].work.values())
     assert residual > 0.0                      # the cut actually happened
     assert sum(plan.history[1].works) == _approx(8.0 + residual)
+
+
+def test_adaptive_zero_speed_barrier_falls_back_to_even_split():
+    """Degenerate re-split, V = 0: every executor known but zero-speed at
+    the barrier (d_i = D v_i / V is 0/0) — the plan falls back to an even
+    split instead of raising out of ``normalized`` mid-job."""
+    for plan in (AdaptivePlan(), AdaptivePlan(quantum=1.0, min_units=1)):
+        plan.estimator.observe("a", 0.0, 1.0)
+        plan.estimator.observe("b", 0.0, 1.0)
+        assert plan.split(["a", "b"], 6.0) == _approx([3.0, 3.0])
+        out = plan.replan(["a", "b"], StaticSpec(works=(4.0, 2.0)))
+        assert out.works == _approx((3.0, 3.0))
+        assert plan.history[-1].replanned
+
+
+def test_adaptive_subquantum_total_splits_evenly():
+    """Degenerate quantization, D < quantum: no executor can receive a
+    whole quantum, so the sub-quantum total is split evenly instead of
+    riding the fastest executor (and min_units no longer raises
+    'infeasible' on a tiny folded residual)."""
+    plan = AdaptivePlan(quantum=1.0, min_units=1)
+    plan.estimator.observe("a", 4.0, 1.0)      # fast
+    plan.estimator.observe("b", 1.0, 1.0)
+    split = plan.split(["a", "b"], 0.4)
+    assert split == _approx([0.2, 0.2])
+    assert sum(split) == _approx(0.4)          # conserved exactly
+    assert plan.split(["a", "b"], 0.0) == _approx([0.0, 0.0])
+
+
+def test_adaptive_quantum_infeasible_min_units_floor_splits_evenly():
+    """Between one quantum and the min_units floor (0 < units <
+    n * min_units) proportional rounding cannot honor the floor — the
+    re-plan must split evenly, not raise 'min_share infeasible' out of
+    run_job on a residual total the caller never chose."""
+    plan = AdaptivePlan(quantum=1.0, min_units=1)
+    plan.estimator.observe("a", 4.0, 1.0)
+    plan.estimator.observe("b", 1.0, 1.0)
+    split = plan.split(["a", "b"], 1.24)       # 1 whole quantum < 2 floors
+    assert split == _approx([0.62, 0.62])
+    assert sum(split) == _approx(1.24)
+    # live repro: a reskew cut folds ~1.2 quanta into the next stage
+    nodes = [SimNode.constant("f", 1.0), SimNode.constant("s", 0.05)]
+    specs = [StaticSpec(works=(0.5, 2.5),
+                        mitigation=ReskewHandoff(cutoff_factor=1.0)),
+             StaticSpec(works=(0.0, 0.0))]
+    run_job_cache_clear()
+    jplan = AdaptivePlan(quantum=1.0, min_units=1)
+    sched = run_job(nodes, specs, adaptive=jplan)   # must not raise
+    residual = 3.0 - sum(sched.stages[0].work.values())
+    assert 1.0 < residual < 2.0                # the in-between window
+    final = jplan.history[1].works
+    assert sum(final) == _approx(residual)
+    assert final[0] == _approx(final[1])
+
+
+def test_adaptive_quantum_subquantum_residual_stage_survives():
+    """Live composition: a reskew cut folds a sub-quantum residual into a
+    zero-work stage — the quantized re-plan must split it evenly, not
+    crash on an infeasible min_units floor."""
+    nodes = [SimNode.constant("f", 1.0), SimNode.constant("s", 0.05)]
+    specs = [StaticSpec(works=(0.5, 0.5),
+                        mitigation=ReskewHandoff(cutoff_factor=1.0)),
+             StaticSpec(works=(0.0, 0.0))]
+    run_job_cache_clear()
+    plan = AdaptivePlan(quantum=1.0, min_units=1)
+    sched = run_job(nodes, specs, adaptive=plan)
+    residual = 1.0 - sum(sched.stages[0].work.values())
+    assert 0.0 < residual < 1.0                # sub-quantum fold happened
+    final = plan.history[1].works
+    assert sum(final) == _approx(residual)     # conserved
+    assert final[0] == _approx(final[1])       # even, not all-on-fastest
 
 
 def test_adaptive_observe_skips_idle_nodes():

@@ -389,16 +389,43 @@ def test_pull_tail_stealing_splits_last_task():
 # validation errors
 # --------------------------------------------------------------------------
 
-def test_mitigation_rejects_effective_io():
+def test_mitigation_accepts_effective_io():
+    """The old 'mitigation requires a CPU-governed stage' ValueError is
+    gone: a mitigated stage with effective I/O now runs on the event
+    calendar (duplicate readers re-fetch through the flow-shared uplink —
+    tests/test_speculation_io.py pins the semantics)."""
     nodes = [SimNode.constant("a", 1.0)]
     tasks = [SimTask(1.0, io_mb=5.0, datanode=0, task_id=0)]
-    with pytest.raises(ValueError, match="CPU-governed"):
-        run_stage_events(nodes, [tasks], pull=True, uplink_bw=10.0,
-                         mitigation=WorkStealing(grain=0.1))
-    # infinite uplink = no effective I/O: allowed
+    res = run_stage_events(nodes, [tasks], pull=True, uplink_bw=10.0,
+                           mitigation=WorkStealing(grain=0.1))
+    # one node, nothing to steal: completion = max(io 0.5, cpu 1.0)
+    assert res.completion == _approx(1.0)
+    # infinite uplink = no effective I/O: unchanged
     res = run_stage_events(nodes, [tasks], pull=True, uplink_bw=None,
                            mitigation=WorkStealing(grain=0.1))
     assert res.completion == _approx(1.0)
+
+
+def test_mitigation_replica_ring_must_cover_datanodes():
+    """The remaining unsupported combination raises with an accurate
+    message: a replica placement whose ring does not cover every datanode
+    the stage reads from (ring arithmetic would alias)."""
+    from repro.core.hdfs_model import DuplicatePlacement
+
+    nodes = [SimNode.constant("a", 1.0)]
+    tasks = [SimTask(1.0, io_mb=5.0, datanode=3, task_id=0)]
+    pol = SpeculativeCopies(placement=DuplicatePlacement("replica", 2))
+    with pytest.raises(ValueError, match="replica placement ring"):
+        run_stage_events(nodes, [tasks], pull=True, uplink_bw=10.0,
+                         mitigation=pol)
+    # no effective I/O: placement is never consulted, stage runs
+    res = run_stage_events(nodes, [tasks], pull=True, uplink_bw=None,
+                           mitigation=pol)
+    assert res.completion == _approx(1.0)
+    with pytest.raises(ValueError, match="n_datanodes"):
+        DuplicatePlacement("replica", 1)
+    with pytest.raises(ValueError, match="placement policy"):
+        DuplicatePlacement("elsewhere", 4)
 
 
 def test_barrier_policy_rejected_at_stage_level():
@@ -556,11 +583,51 @@ def test_fleet_monitor_speculation_candidates():
     assert m.speculation_candidates(3.0, done, {"t2": 0.5}) == ["t2"]
 
 
-def test_legacy_speculative_copies_helper_unchanged():
+def test_legacy_speculative_copies_helper():
+    """Away from the threshold boundary the legacy helper behaves as it
+    always did; the boundary itself is unified with the engine (see
+    test_trigger_boundary_unified_across_exposures)."""
     from repro.core.straggler import speculative_copies
     done = {0: 1.0, 1: 1.2, 2: None}
     assert speculative_copies(done, 1.5, {2: 0.5}) == []
     assert speculative_copies(done, 3.0, {2: 0.5}) == [2]
+
+
+@pytest.mark.parametrize("factor,q,done", [
+    (2.0, 0.5, [1.0, 1.2]),
+    (1.5, 0.75, [0.5, 2.0, 3.0]),
+    (1.2, 0.5, [4.0]),
+])
+def test_trigger_boundary_unified_across_exposures(factor, q, done):
+    """A task running EXACTLY factor * quantile(done) gets the same
+    at-threshold verdict from all three exposures: the legacy
+    straggler helper, FleetMonitor.speculation_candidates, and the
+    engine-side SpeculativeCopies trigger — plus just-under stays False
+    everywhere."""
+    from repro.core.straggler import speculative_copies
+    from repro.runtime.ft import FleetMonitor
+
+    pol = SpeculativeCopies(quantile=q, factor=factor, min_completed=1)
+    thr = pol.threshold(done)
+    eps = 1e-6 * thr
+    for elapsed, verdict in ((thr, True), (thr - eps, False)):
+        now = 10.0
+        st = now - elapsed
+        # engine-side rule (run_stage_events applies it via offer())
+        assert pol.should_speculate(done, elapsed) is verdict
+        act = pol.offer(done, [RunningAttempt(0, 7, st, 4.0, 1.0, False)],
+                        now)
+        assert (act is not None) is verdict
+        # runtime monitor
+        mon = FleetMonitor(["a"], speculation=pol)
+        got = mon.speculation_candidates(now, done, {"t": st})
+        assert (got == ["t"]) is verdict
+        # legacy helper exposes quantile 0.5 only
+        if q == 0.5:
+            legacy = speculative_copies({i: d for i, d in enumerate(done)},
+                                        now, {9: st},
+                                        timeout_factor=factor)
+            assert (legacy == [9]) is verdict
 
 
 def test_bench_speculation_reproduces_paper_ordering():

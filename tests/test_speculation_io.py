@@ -1,0 +1,703 @@
+"""I/O-aware mitigation vs. a naive full-rescan oracle (tentpole suite).
+
+The oracle below restates the documented I/O-mitigation semantics
+(``repro.core.speculation`` module docstring) as a rescan-everything loop:
+per-datanode fair-share rates recomputed from scratch at every event, every
+flow advanced between consecutive event instants, full ``SimNode`` profile
+walks — none of the engine's cursors, checkpoints, or version-skipped
+incremental repricing.  Randomized differential suites pin
+``run_stage_events(mitigation=...)`` on stages with effective I/O — and the
+``run_job`` threading of mitigated-I/O specs — against it at 1e-9, covering
+duplicate-fetch sharing, loser-cancel repricing, and the no-op case where
+the copy never wins.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.engine import (
+    PullSpec, StaticSpec, run_job, run_job_cache_clear, run_stage_events,
+)
+from repro.core.hdfs_model import DuplicatePlacement
+from repro.core.simulator import (
+    SimNode, SimTask, TaskRecord, _stage_result,
+)
+from repro.core.speculation import (
+    RunningAttempt, Speculate, SpeculativeCopies, WorkStealing,
+)
+
+REL = ABS = 1e-9
+_EPS = 1e-9
+
+
+def _approx(x):
+    return pytest.approx(x, rel=REL, abs=ABS)
+
+
+# --------------------------------------------------------------------------
+# the oracle: naive rescan loop with flows, per the documented semantics
+# --------------------------------------------------------------------------
+
+def oracle_stage_io(nodes, queues, pull, uplink_bw=None, mitigation=None,
+                    start_time=0.0):
+    """Full-rescan I/O + mitigation oracle: rates recomputed globally at
+    every event, all flows advanced between events, no incremental state."""
+    n = len(nodes)
+    bw = uplink_bw if uplink_bw else None
+    shared = list(queues[0]) if pull else None
+    private = None if pull else [list(q) for q in queues]
+    busy = [False] * n
+    tid = [0] * n
+    start = [0.0] * n
+    launch = [0.0] * n
+    task_work = [0.0] * n        # the attempt task's cpu_work field
+    task_io = [0.0] * n          # the attempt task's io_mb field (raw)
+    task_dn = [-1] * n           # the attempt task's datanode field (raw)
+    att_work = [0.0] * n         # attempt work (shrinks on steal)
+    att_io = [0.0] * n           # effective attempt bytes (shrinks on steal)
+    io_left = [0.0] * n
+    cpu_done = [0.0] * n
+    twin = [-1] * n
+    copied = set()
+    done = []
+    rechecks = {}
+    records = []
+    node_finish = {nd.name: start_time for nd in nodes}
+    placement = getattr(mitigation, "placement", None)
+
+    def dup_dn(d):
+        return d if placement is None else placement.choose(d)
+
+    def flow_active(i):
+        return (busy[i] and bw is not None and task_dn[i] >= 0
+                and io_left[i] > _EPS)
+
+    def rates():
+        cnt = {}
+        for i in range(n):
+            if flow_active(i):
+                cnt[task_dn[i]] = cnt.get(task_dn[i], 0) + 1
+        return {d: bw / c for d, c in cnt.items()}
+
+    def start_attempt(i, task_id, w, io, d, now):
+        busy[i] = True
+        tid[i] = task_id
+        start[i] = now
+        launch[i] = now + nodes[i].task_overhead
+        task_work[i] = att_work[i] = w
+        task_io[i] = io
+        task_dn[i] = d
+        cpu_done[i] = nodes[i].finish_time(w, launch[i])
+        if bw is not None and d >= 0 and io > _EPS:
+            att_io[i] = io
+            io_left[i] = io
+        else:
+            att_io[i] = 0.0
+            io_left[i] = 0.0
+        rechecks.pop(i, None)
+
+    def refill(i, now):
+        if pull:
+            if shared:
+                tk = shared.pop(0)
+                start_attempt(i, tk.task_id, tk.cpu_work, tk.io_mb,
+                              tk.datanode, now)
+        elif private[i]:
+            tk = private[i].pop(0)
+            start_attempt(i, tk.task_id, tk.cpu_work, tk.io_mb,
+                          tk.datanode, now)
+
+    def remaining(k, now):
+        if now < launch[k]:
+            return att_work[k]
+        return nodes[k].work_between(now, cpu_done[k])
+
+    def queue_empty(i):
+        return not shared if pull else not private[i]
+
+    def offer_all(now):
+        while True:
+            running = [RunningAttempt(k, tid[k], start[k], att_work[k],
+                                      remaining(k, now), tid[k] in copied,
+                                      att_io[k])
+                       for k in range(n) if busy[k]]
+            if not running:
+                return
+            by_node = {r.node: r for r in running}
+            acted = False
+            for k in range(n):
+                if busy[k] or not queue_empty(k):
+                    continue
+                act = mitigation.offer(done, running, now)
+                if act is None:
+                    continue
+                victim = by_node[act.victim]
+                j = act.victim
+                if isinstance(act, Speculate):
+                    # duplicate: the attempt task's full work and bytes,
+                    # re-fetched from the placement-chosen datanode
+                    copied.add(victim.task_id)
+                    start_attempt(k, victim.task_id, task_work[j],
+                                  task_io[j], dup_dn(task_dn[j]), now)
+                    twin[k] = j
+                    twin[j] = k
+                else:                  # Steal
+                    moved = 0.0
+                    if att_io[j] > _EPS and victim.work > 0.0:
+                        moved = att_io[j] * act.amount / victim.work
+                        att_io[j] -= moved
+                    att_work[j] -= act.amount
+                    cpu_done[j] = nodes[j].finish_time(
+                        victim.remaining - act.amount, max(now, launch[j]))
+                    if moved > 0.0:
+                        # the victim stops fetching the stolen range
+                        # (already-streamed bytes are not refunded)
+                        io_left[j] = max(0.0, io_left[j] - moved)
+                    start_attempt(k, victim.task_id, act.amount, moved,
+                                  dup_dn(task_dn[j]) if moved > _EPS
+                                  else -1, now)
+                acted = True
+                break
+            if not acted:
+                for k in range(n):
+                    if busy[k] or not queue_empty(k):
+                        continue
+                    nc = mitigation.next_check(done, running, now)
+                    if nc is not None:
+                        rechecks[k] = nc
+                return
+
+    def complete(i, now):
+        records.append(TaskRecord(tid[i], nodes[i].name, start[i], now,
+                                  att_work[i]))
+        node_finish[nodes[i].name] = now
+        busy[i] = False
+        io_left[i] = 0.0
+        if mitigation is None:
+            refill(i, now)
+            return
+        done.append(now - start[i])
+        loser = twin[i]
+        if loser >= 0:
+            # first finisher wins: the loser's in-flight flow is freed at
+            # this instant (survivors reprice causally — the next rescan
+            # simply sees one reader fewer)
+            twin[i] = twin[loser] = -1
+            busy[loser] = False
+            io_left[loser] = 0.0
+        refill(i, now)
+        if loser >= 0:
+            refill(loser, now)
+        offer_all(now)
+
+    for i in range(n):
+        refill(i, start_time)
+    if mitigation is not None:
+        offer_all(start_time)
+
+    t = start_time
+    guard = 0
+    while any(busy) or rechecks:
+        guard += 1
+        assert guard < 1_000_000, "oracle runaway"
+        cur = rates()
+        events = []
+        for i in range(n):
+            if not busy[i]:
+                continue
+            if flow_active(i):
+                r = cur[task_dn[i]]
+                events.append((t + io_left[i] / r, i, "io"))
+            else:
+                # causal completion: a flow that drained exactly when a
+                # co-reader left completes no earlier than now
+                events.append((max(t, cpu_done[i]), i, "done"))
+        events += [(tc, i, "recheck") for i, tc in rechecks.items()
+                   if not busy[i]]
+        t_next, i, kind = min(events, key=lambda e: (e[0], e[1]))
+        for j in range(n):
+            if flow_active(j):
+                io_left[j] = max(0.0,
+                                 io_left[j] - cur[task_dn[j]] * (t_next - t))
+        t = t_next
+        if kind == "recheck":
+            del rechecks[i]
+            offer_all(t)
+        elif kind == "io":
+            io_left[i] = 0.0
+            if t + _EPS >= cpu_done[i]:
+                complete(i, t)
+        else:
+            complete(i, t)
+
+    return _stage_result(records, node_finish, start_time)
+
+
+def assert_stage_match(oracle, got):
+    assert got.completion == _approx(oracle.completion)
+    assert got.idle_time == _approx(oracle.idle_time)
+    assert set(got.node_finish) == set(oracle.node_finish)
+    for name, tt in oracle.node_finish.items():
+        assert got.node_finish[name] == _approx(tt)
+    ra = sorted(oracle.records, key=lambda r: (r.task_id, r.node, r.start))
+    rb = sorted(got.records, key=lambda r: (r.task_id, r.node, r.start))
+    assert len(ra) == len(rb)
+    for a, b in zip(ra, rb):
+        assert b.task_id == a.task_id and b.node == a.node
+        assert b.start == _approx(a.start)
+        assert b.end == _approx(a.end)
+        assert b.cpu_work == _approx(a.cpu_work)
+
+
+# --------------------------------------------------------------------------
+# randomized generators
+# --------------------------------------------------------------------------
+
+N_DATANODES = 3
+
+
+def random_cluster(rng, max_nodes=4, constant=False):
+    n = int(rng.integers(2, max_nodes + 1))
+    nodes = []
+    for i in range(n):
+        if constant:
+            prof = [(0.0, float(rng.uniform(0.2, 3.0)))]
+        else:
+            n_seg = int(rng.integers(1, 4))
+            breaks = np.concatenate(
+                [[0.0], np.cumsum(rng.uniform(0.5, 5.0, n_seg - 1))])
+            prof = [(float(tb), float(rng.uniform(0.2, 3.0)))
+                    for tb in breaks]
+        nodes.append(SimNode(f"n{i}", prof, float(rng.uniform(0.0, 0.3))))
+    return nodes
+
+
+def random_placement(rng):
+    u = rng.random()
+    if u < 0.4:
+        return None
+    if u < 0.7:
+        return DuplicatePlacement("same")
+    return DuplicatePlacement("replica", N_DATANODES)
+
+
+def random_policy(rng):
+    if rng.random() < 0.5:
+        return WorkStealing(grain=float(rng.choice([0.1, 0.25, 0.5, 1.0])),
+                            placement=random_placement(rng))
+    return SpeculativeCopies(
+        quantile=float(rng.choice([0.5, 0.75, 0.9])),
+        factor=float(rng.uniform(1.05, 3.0)),
+        min_completed=int(rng.integers(1, 4)),
+        io_cost_per_mb=float(rng.choice([0.0, 0.05, 0.2])),
+        placement=random_placement(rng))
+
+
+def random_io_tasks(rng, lo=1, hi=18):
+    n_tasks = int(rng.integers(lo, hi))
+    tasks = []
+    for i in range(n_tasks):
+        if rng.random() < 0.75:
+            io = float(rng.uniform(0.3, 6.0))
+            dn = int(rng.integers(0, N_DATANODES))
+        else:
+            io, dn = 0.0, -1
+        tasks.append(SimTask(float(rng.uniform(0.01, 5.0)), io, dn,
+                             task_id=i))
+    return tasks
+
+
+def random_uplink(rng):
+    return None if rng.random() < 0.15 else float(rng.uniform(0.5, 4.0))
+
+
+# --------------------------------------------------------------------------
+# randomized differential suites (engine vs. oracle at 1e-9)
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_io_mitigated_pull(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    tasks = random_io_tasks(rng)
+    pol = random_policy(rng)
+    bw = random_uplink(rng)
+    start = float(rng.uniform(0.0, 2.0))
+    oracle = oracle_stage_io(nodes, [list(tasks)], pull=True, uplink_bw=bw,
+                             mitigation=pol, start_time=start)
+    got = run_stage_events(nodes, [tasks], pull=True, uplink_bw=bw,
+                           start_time=start, mitigation=pol)
+    assert_stage_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_io_mitigated_static(seed):
+    """HeMT macrotasks reading skewed shares from shared uplinks (the
+    Claim 2 x mitigation cross setting), random policies and profiles."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    n = len(nodes)
+    queues = []
+    for i in range(n):
+        if rng.random() < 0.9:
+            io = float(rng.uniform(0.3, 8.0)) if rng.random() < 0.8 else 0.0
+            dn = int(rng.integers(0, N_DATANODES)) if io else -1
+            queues.append([SimTask(float(rng.uniform(0.0, 8.0)), io, dn,
+                                   task_id=i)])
+        else:
+            queues.append([])
+    pol = random_policy(rng)
+    bw = random_uplink(rng)
+    oracle = oracle_stage_io(nodes, [list(q) for q in queues], pull=False,
+                             uplink_bw=bw, mitigation=pol)
+    got = run_stage_events(nodes, queues, pull=False, uplink_bw=bw,
+                           mitigation=pol)
+    assert_stage_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_io_unmitigated_oracle_agrees(seed):
+    """Sanity on the oracle itself: with mitigation=None it must agree
+    with the engine's (already differential-tested) unmitigated I/O event
+    path — anchoring the mitigated comparisons above."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    tasks = random_io_tasks(rng)
+    bw = random_uplink(rng)
+    oracle = oracle_stage_io(nodes, [list(tasks)], pull=True, uplink_bw=bw)
+    got = run_stage_events(nodes, [tasks], pull=True, uplink_bw=bw)
+    assert_stage_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_run_job_mitigated_io(seed):
+    """run_job threading mitigated-I/O specs (cached, shifted solves on
+    constant clusters; absolute-time solves otherwise) == per-stage oracle
+    runs with barriers carried by hand."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, constant=bool(rng.random() < 0.7))
+    n = len(nodes)
+    pol = random_policy(rng)
+    bw = float(rng.uniform(0.5, 4.0))
+    specs = []
+    for _ in range(int(rng.integers(1, 4))):
+        if rng.random() < 0.5:
+            specs.append(StaticSpec(
+                works=tuple(rng.uniform(0.0, 5.0, n)), mitigation=pol,
+                io_mb=float(rng.uniform(0.0, 10.0)),
+                datanode=int(rng.integers(0, N_DATANODES))))
+        else:
+            specs.append(PullSpec(
+                works=tuple(rng.uniform(0.01, 3.0,
+                                        int(rng.integers(1, 12)))),
+                io_mb=float(rng.uniform(0.0, 2.0)),
+                datanode=int(rng.integers(0, N_DATANODES)),
+                mitigation=pol))
+    run_job_cache_clear()
+    sched = run_job(nodes, specs, uplink_bw=bw)
+    t = 0.0
+    for spec, summ in zip(specs, sched.stages):
+        if isinstance(spec, StaticSpec):
+            ios = spec.io_split()
+            queues = [[SimTask(w, ios[i], spec.datanode if ios[i] > 0
+                               else -1, task_id=i)]
+                      for i, w in enumerate(spec.works)]
+            res = oracle_stage_io(nodes, queues, pull=False, uplink_bw=bw,
+                                  mitigation=pol, start_time=t)
+        else:
+            tasks = [SimTask(w, spec.io_mb, spec.datanode, task_id=i)
+                     for i, w in enumerate(spec.works)]
+            res = oracle_stage_io(nodes, [tasks], pull=True, uplink_bw=bw,
+                                  mitigation=pol, start_time=t)
+        assert summ.completion == _approx(res.completion)
+        assert summ.idle_time == _approx(res.idle_time)
+        for nd in nodes:
+            assert summ.node_finish[nd.name] == _approx(
+                res.node_finish[nd.name])
+        t = res.completion
+    assert sched.completion == _approx(t)
+
+
+# --------------------------------------------------------------------------
+# crafted scenarios: fetch sharing, cancel repricing, no-op copies
+# --------------------------------------------------------------------------
+
+def test_duplicate_fetch_shares_uplink_and_copy_wins():
+    """The Claim 2 x mitigation scenario: a CPU-bound straggler's copy on
+    a fast node re-fetches its input through the SAME uplink and wins;
+    the loser's completion never happens and the copy's fetch time
+    reflects fair sharing while the primary flow is still live."""
+    nodes = [SimNode.constant("fast", 1.0),
+             SimNode.constant("slow", 0.1)]
+    # slow: 5 units of work (50s), 4 MB input; fast: short warmup task
+    queues = [[SimTask(1.0, task_id=0)],
+              [SimTask(5.0, 4.0, 0, task_id=1)]]
+    pol = SpeculativeCopies(quantile=0.5, factor=2.0, min_completed=1)
+    res = run_stage_events(nodes, [list(q) for q in queues], pull=False,
+                           uplink_bw=1.0, mitigation=pol)
+    # fast done at 1.0 -> threshold 2.0 -> recheck at t=2; slow has
+    # fetched 2 MB by then.  Copy launches on fast at t=2: both flows
+    # share datanode 0 at rate 0.5 -> slow drains its last 2 MB at t=6
+    # with the copy at 2 of its 4 MB; the copy's survivor flow reprices
+    # to the full 1.0 rate and drains its last 2 MB at t=8; copy CPU
+    # (5u at speed 1, launched t=2) done at t=7 -> the copy completes at
+    # max(8, 7) = 8 and wins (slow's CPU would run to t=50).
+    winners = [r for r in res.records if r.task_id == 1]
+    assert len(winners) == 1
+    assert winners[0].node == "fast"
+    assert winners[0].end == _approx(8.0)
+    assert res.completion == _approx(8.0)
+    assert_stage_match(
+        oracle_stage_io(nodes, [list(q) for q in queues], pull=False,
+                        uplink_bw=1.0, mitigation=pol), res)
+
+
+def test_replica_placement_dodges_contended_uplink():
+    """Same scenario, replica placement: the copy reads datanode (0+1)%2
+    with its own free uplink -> 4 MB at full rate, fetch done at t=6,
+    CPU at t=7 -> the copy wins 3s earlier than the same-datanode copy."""
+    nodes = [SimNode.constant("fast", 1.0),
+             SimNode.constant("slow", 0.1)]
+    queues = [[SimTask(1.0, task_id=0)],
+              [SimTask(5.0, 4.0, 0, task_id=1)]]
+    pol = SpeculativeCopies(quantile=0.5, factor=2.0, min_completed=1,
+                            placement=DuplicatePlacement("replica", 2))
+    res = run_stage_events(nodes, [list(q) for q in queues], pull=False,
+                           uplink_bw=1.0, mitigation=pol)
+    winners = [r for r in res.records if r.task_id == 1]
+    assert winners[0].node == "fast"
+    assert winners[0].end == _approx(7.0)
+    assert res.completion == _approx(7.0)
+    assert_stage_match(
+        oracle_stage_io(nodes, [list(q) for q in queues], pull=False,
+                        uplink_bw=1.0, mitigation=pol), res)
+
+
+def test_loser_cancel_frees_flow_and_reprices_survivors():
+    """Three flows on one uplink; when the copy wins, the cancelled
+    loser's flow leaves the reader set and the surviving primary reader
+    speeds up from that instant — causally, never retroactively."""
+    nodes = [SimNode.constant("fast", 10.0),
+             SimNode.constant("slow", 0.05),
+             SimNode.constant("other", 10.0)]
+    queues = [[SimTask(0.1, task_id=0)],
+              [SimTask(4.0, 3.0, 0, task_id=1)],    # straggler, reading
+              [SimTask(0.5, 30.0, 0, task_id=2)]]   # long co-reader
+    pol = SpeculativeCopies(quantile=0.5, factor=2.0, min_completed=1)
+    res = run_stage_events(nodes, [list(q) for q in queues], pull=False,
+                           uplink_bw=3.0, mitigation=pol)
+    oracle = oracle_stage_io(nodes, [list(q) for q in queues], pull=False,
+                             uplink_bw=3.0, mitigation=pol)
+    assert_stage_match(oracle, res)
+    # the copy won on the fast node and the straggler produced no record
+    winners = [r for r in res.records if r.task_id == 1]
+    assert len(winners) == 1 and winners[0].node == "fast"
+    # survivor repricing is causal: the co-reader's finish must beat the
+    # constant-3-readers schedule (its flow sped up when the loser left)
+    other = [r for r in res.records if r.task_id == 2][0]
+    assert other.end < 30.0 / (3.0 / 3.0) - 1e-6
+
+
+def test_noop_copy_never_wins_matches_oracle_and_unmitigated_when_off():
+    """No-op coverage: (a) a copy that can never win (the straggler is
+    I/O-bound and the copy contends on the same uplink) — the original
+    still produces the only record; (b) a threshold never crossed — the
+    mitigated run is bit-identical to the unmitigated one."""
+    nodes = [SimNode.constant("fast", 2.0), SimNode.constant("slow", 1.0)]
+    queues = [[SimTask(0.5, 1.0, 0, task_id=0)],
+              [SimTask(0.5, 10.0, 0, task_id=1)]]
+    pol = SpeculativeCopies(quantile=0.5, factor=2.0, min_completed=1)
+    res = run_stage_events(nodes, [list(q) for q in queues], pull=False,
+                           uplink_bw=1.0, mitigation=pol)
+    oracle = oracle_stage_io(nodes, [list(q) for q in queues], pull=False,
+                             uplink_bw=1.0, mitigation=pol)
+    assert_stage_match(oracle, res)
+    winners = [r for r in res.records if r.task_id == 1]
+    assert len(winners) == 1 and winners[0].node == "slow"
+
+    # (b) huge factor: nothing ever triggers -> identical to unmitigated
+    off = SpeculativeCopies(quantile=0.5, factor=100.0, min_completed=1)
+    base = run_stage_events(nodes, [list(q) for q in queues], pull=False,
+                            uplink_bw=1.0)
+    got = run_stage_events(nodes, [list(q) for q in queues], pull=False,
+                           uplink_bw=1.0, mitigation=off)
+    assert got.records == base.records
+    assert got.completion == base.completion
+
+
+def test_io_cost_term_delays_copy_launch():
+    """The policy's re-fetch cost term: with io_cost_per_mb the trigger
+    threshold rises by cost * attempt bytes, so the copy launches later
+    (or never) for byte-heavy attempts."""
+    nodes = [SimNode.constant("fast", 1.0), SimNode.constant("slow", 0.1)]
+    queues = [[SimTask(1.0, task_id=0)], [SimTask(5.0, 4.0, 0, task_id=1)]]
+    free = SpeculativeCopies(quantile=0.5, factor=2.0, min_completed=1)
+    priced = SpeculativeCopies(quantile=0.5, factor=2.0, min_completed=1,
+                               io_cost_per_mb=1.0)
+    r_free = run_stage_events(nodes, [list(q) for q in queues], pull=False,
+                              uplink_bw=1.0, mitigation=free)
+    r_priced = run_stage_events(nodes, [list(q) for q in queues],
+                                pull=False, uplink_bw=1.0,
+                                mitigation=priced)
+    assert_stage_match(
+        oracle_stage_io(nodes, [list(q) for q in queues], pull=False,
+                        uplink_bw=1.0, mitigation=priced), r_priced)
+    start_free = min(r.start for r in r_free.records
+                     if r.task_id == 1 and r.node == "fast")
+    start_priced = min(r.start for r in r_priced.records
+                       if r.task_id == 1 and r.node == "fast")
+    # threshold shifted by io_cost_per_mb * 4 MB = 4s
+    assert start_priced == _approx(start_free + 4.0)
+
+
+def test_steal_moves_unfetched_bytes_with_the_work():
+    """Stealing on an I/O stage: the thief re-fetches the stolen range's
+    byte share as a new flow and the victim stops fetching that range."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 0.25)]
+    queues = [[SimTask(1.0, task_id=0)], [SimTask(8.0, 8.0, 0, task_id=1)]]
+    pol = WorkStealing(grain=1.0)
+    res = run_stage_events(nodes, [list(q) for q in queues], pull=False,
+                           uplink_bw=4.0, mitigation=pol)
+    oracle = oracle_stage_io(nodes, [list(q) for q in queues], pull=False,
+                             uplink_bw=4.0, mitigation=pol)
+    assert_stage_match(oracle, res)
+    pieces = {r.node: r for r in res.records if r.task_id == 1}
+    assert set(pieces) == {"a", "b"}
+    # mitigation helped: without it b alone runs 8u at 0.25 = 32s
+    base = run_stage_events(nodes, [[SimTask(1.0, task_id=0)],
+                                    [SimTask(8.0, 8.0, 0, task_id=1)]],
+                            pull=False, uplink_bw=4.0)
+    assert res.completion < base.completion
+
+
+# --------------------------------------------------------------------------
+# run_job solve caching: start-invariance, no poisoning
+# --------------------------------------------------------------------------
+
+def test_run_job_mitigated_io_cache_no_poisoning():
+    """Mitigated-I/O solves are start-invariant on constant clusters, so
+    the solve LRU may cache them — pinned here: repeated and interleaved
+    mitigated-I/O stages (within one job and across warm-cache re-runs)
+    must equal fresh absolute-time event solves, and a different
+    uplink_bw must not reuse the entry."""
+    nodes = [SimNode.constant(f"n{i}", s, 0.1)
+             for i, s in enumerate([1.0, 1.0, 0.3])]
+    pol = SpeculativeCopies(quantile=0.5, factor=1.3, min_completed=1)
+    spec_a = StaticSpec(works=(3.0, 3.0, 3.0), mitigation=pol, io_mb=6.0,
+                        datanode=0)
+    spec_b = PullSpec(works=(1.0,) * 6, io_mb=0.5, datanode=1,
+                      mitigation=WorkStealing(grain=0.25))
+    specs = [spec_a, spec_b, spec_a, spec_a]
+    run_job_cache_clear()
+    sched = run_job(nodes, specs, uplink_bw=2.0)
+    warm = run_job(nodes, specs, uplink_bw=2.0)   # warm module-level LRU
+
+    t = 0.0
+    from repro.core.engine import _spec_tasks
+    for spec, summ, wsumm in zip(specs, sched.stages, warm.stages):
+        res = run_stage_events(nodes, _spec_tasks(spec),
+                               pull=isinstance(spec, PullSpec),
+                               uplink_bw=2.0, start_time=t,
+                               mitigation=spec.mitigation)
+        assert summ.completion == _approx(res.completion)
+        for nd in nodes:
+            assert summ.node_finish[nd.name] == _approx(
+                res.node_finish[nd.name])
+            assert wsumm.node_finish[nd.name] == _approx(
+                res.node_finish[nd.name])
+        t = res.completion
+    # a different uplink_bw keys a different solve: no stale reuse
+    other = run_job(nodes, [spec_a], uplink_bw=0.5)
+    fresh = run_stage_events(nodes, _spec_tasks(spec_a), pull=False,
+                             uplink_bw=0.5, mitigation=pol)
+    assert other.completion == _approx(fresh.completion)
+
+
+def test_static_spec_io_split_and_unmitigated_routing():
+    """StaticSpec I/O semantics: io_mb splits proportionally to works
+    (evenly when all-zero), and an unmitigated static stage with
+    effective I/O routes to the event calendar inside run_job."""
+    spec = StaticSpec(works=(1.0, 3.0), io_mb=8.0, datanode=0)
+    assert spec.io_split() == _approx((2.0, 6.0))
+    assert StaticSpec(works=(0.0, 0.0), io_mb=8.0,
+                      datanode=0).io_split() == _approx((4.0, 4.0))
+    assert StaticSpec(works=(1.0, 3.0)).io_split() == (0.0, 0.0)
+
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    run_job_cache_clear()
+    sched = run_job(nodes, [spec], uplink_bw=1.0)
+    oracle = oracle_stage_io(
+        nodes, [[SimTask(1.0, 2.0, 0, task_id=0)],
+                [SimTask(3.0, 6.0, 0, task_id=1)]], pull=False,
+        uplink_bw=1.0)
+    assert sched.completion == _approx(oracle.completion)
+    # without uplink the closed static form applies: max(works) = 3
+    run_job_cache_clear()
+    assert run_job(nodes, [spec]).completion == _approx(3.0)
+
+
+def test_scheduler_surfaces_thread_io_mitigation():
+    """MultiStageJob and AdaptiveHeMTScheduler expose the cross
+    experiment: stale HeMT on a network-fed cluster recovers with an
+    I/O-aware policy."""
+    from repro.core.scheduler import AdaptiveHeMTScheduler, MultiStageJob
+
+    nodes = [SimNode.constant(f"e{i}", s, 0.05)
+             for i, s in enumerate([1.0, 1.0, 0.25])]
+    job = MultiStageJob(stage_works=[6.0] * 3, stage_io_mb=[6.0] * 3,
+                        datanode=0)
+    weights = [1.0, 1.0, 1.0]                     # stale: even skew
+    total_plain, _ = job.run(nodes, weights, uplink_bw=4.0)
+    pol = SpeculativeCopies(quantile=0.5, factor=1.3, min_completed=1)
+    total_spec, _ = job.run(nodes, weights, mitigation=pol, uplink_bw=4.0)
+    assert total_spec < total_plain
+    # records mode agrees with the spec path
+    total_rec, results = job.run(nodes, weights, records=True,
+                                 mitigation=pol, uplink_bw=4.0)
+    assert total_rec == _approx(total_spec)
+    assert all(res.records for res in results)
+
+    def factory(_k):
+        return [SimNode.constant(f"e{i}", v, 0.05)
+                for i, v in enumerate([1.0, 1.0, 0.25])]
+
+    plain = AdaptiveHeMTScheduler([f"e{i}" for i in range(3)])
+    plain.run_simulated_sequence(factory, 3, total_work=9.0,
+                                 io_mb_total=9.0, uplink_bw=6.0)
+    mit = AdaptiveHeMTScheduler([f"e{i}" for i in range(3)],
+                                mitigation=pol)
+    mit.run_simulated_sequence(factory, 3, total_work=9.0,
+                               io_mb_total=9.0, uplink_bw=6.0)
+    assert mit.history[0].completion < plain.history[0].completion
+    # the estimator still converges near the balanced optimum
+    opt = 9.0 / sum([1.0, 1.0, 0.25])
+    assert mit.history[-1].completion == pytest.approx(opt, rel=0.3)
+
+
+def test_bench_speculation_io_reproduces_claim2_cross_ordering():
+    """Acceptance row: on the network-governed shuffle with stale
+    estimates, HeMT rescued by an I/O-aware duplicate reader beats the
+    unmitigated stale split, which in turn beats overhead-taxed HomT —
+    the Claim 2 x mitigation cross the paper predicts."""
+    from benchmarks.bench_speculation_io import scenario_completions
+
+    c = scenario_completions()
+    best = min(c["hemt_io_spec"], c["hemt_io_spec_replica"],
+               c["hemt_io_steal"])
+    assert best < c["hemt_io"] < c["homt_io"], c
+    assert c["hemt_io_spec"] < c["hemt_io"]
+    assert c["hemt_io_spec_replica"] <= c["hemt_io_spec"] + 1e-9
+    assert c["hemt_io_steal"] < c["hemt_io"]
+
+
+@given(seed=st.integers(0, 2_000))
+def test_oracle_has_no_infinite_rates(seed):
+    """Guard on the oracle's own soundness: rates stay finite whenever a
+    flow is active (bw None disables flows entirely)."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, constant=True)
+    tasks = random_io_tasks(rng, hi=8)
+    res = oracle_stage_io(nodes, [list(tasks)], pull=True, uplink_bw=None)
+    assert math.isfinite(res.completion)
