@@ -1,0 +1,146 @@
+"""Fault injection through the whole-job engine: spot preemption vs the
+three scheduling regimes (``repro.core.faults``; paper §5.1's replacement
+rule, §8's revocable-capacity setting).
+
+One scenario, capacity revoked mid-job: a 4-node cluster whose fastest
+node is a spot instance that gets preempted (0.5 s warning) during the
+first of four identical HeMT stages.  The preempted macrotask re-runs
+from scratch on a survivor (no checkpoint), and every later stage has one
+node fewer.  Variants on identical work:
+
+* **homt**: fine microtasks through the shared queue.  Pull degrades
+  gracefully — the dead node simply stops pulling — but pays the
+  per-microtask overhead tax on every stage, dead node or not.
+* **hemt_stale**: the pre-fault HeMT split, unmitigated and never
+  re-planned.  Every post-fault stage still hands the dead node its 40%
+  share, which sheds to a single least-loaded survivor and serializes
+  behind that node's own macrotask: the stage span roughly triples, and
+  the job collapses to ~3x its clean run.
+* **oa_hemt**: the online-adaptive loop under the same trace.  The crash
+  stage eats the re-execution, then every barrier re-splits the whole
+  stage over the survivors (alive-masked re-plan; the dead node gets a
+  zero-work macrotask) while survivors keep their AR(1) estimates.
+* **clairvoyant**: the post-failure clairvoyant yardstick — a schedule
+  that writes the doomed node off entirely and splits every stage over
+  the three survivors, fault-free.  (An upper bound on the true
+  clairvoyant optimum, which would also use the spot node's pre-kill
+  capacity; the gap assertion is conservative.)
+
+The paper-predicted ordering — HomT degrades gracefully, stale static
+HeMT collapses, OA-HeMT lands within a small gap of the post-failure
+clairvoyant — is returned by ``scenario_completions`` and pinned by the
+tier-1 suite (tests/test_faults.py); the timed rows land in the
+``faults`` section of BENCH_sim.json and are gated by ``run.py --check``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import BenchRow, timed
+from repro.core.engine import (
+    AdaptivePlan, PullSpec, StaticSpec, run_job, run_job_cache_clear,
+)
+from repro.core.faults import FaultTrace, SpotPreemption
+from repro.core.simulator import SimNode
+from repro.core.speculation import ReskewHandoff
+
+TOTAL_WORK = 16.0
+STAGES = 4
+OVERHEAD = 0.05
+SPEEDS = (1.0, 1.0, 1.0, 2.0)    # the spot instance is the fastest node
+SPOT = 3                         # ... and the one that gets preempted
+N_MICRO = 64                     # HomT microtask count per stage
+
+TRACE = FaultTrace((SpotPreemption(SPOT, 2.0, warning=0.5),))
+
+
+def _nodes() -> List[SimNode]:
+    return [SimNode.constant(f"n{i}", s, OVERHEAD)
+            for i, s in enumerate(SPEEDS)]
+
+
+def _hemt_works() -> tuple:
+    total_speed = sum(SPEEDS)
+    return tuple(TOTAL_WORK * s / total_speed for s in SPEEDS)
+
+
+def _homt_specs() -> List[PullSpec]:
+    return [PullSpec(n_tasks=N_MICRO, task_work=TOTAL_WORK / N_MICRO)
+            ] * STAGES
+
+
+def _hemt_specs(mitigation=None) -> List[StaticSpec]:
+    return [StaticSpec(works=_hemt_works(), mitigation=mitigation)] * STAGES
+
+
+def scenario_completions() -> Dict[str, float]:
+    """Completion time per scheduling regime, clean and under the trace."""
+    nodes = _nodes()
+    out = {}
+    run_job_cache_clear()
+    out["homt_clean"] = run_job(nodes, _homt_specs()).completion
+    run_job_cache_clear()
+    out["homt_faults"] = run_job(nodes, _homt_specs(),
+                                 faults=TRACE).completion
+    run_job_cache_clear()
+    out["hemt_clean"] = run_job(nodes, _hemt_specs()).completion
+    run_job_cache_clear()
+    out["hemt_stale_faults"] = run_job(nodes, _hemt_specs(),
+                                       faults=TRACE).completion
+    run_job_cache_clear()
+    out["oa_hemt_faults"] = run_job(
+        nodes, _hemt_specs(mitigation=ReskewHandoff()),
+        adaptive=AdaptivePlan(), faults=TRACE).completion
+    # post-failure clairvoyant: survivors only, fault-free
+    survivors = [nd for i, nd in enumerate(_nodes()) if i != SPOT]
+    share = TOTAL_WORK / len(survivors)
+    run_job_cache_clear()
+    out["clairvoyant_faults"] = run_job(
+        survivors,
+        [StaticSpec(works=(share,) * len(survivors))] * STAGES).completion
+    return out
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    comps = {}
+    variants = {
+        "homt_clean": (_homt_specs(), None, None),
+        "homt_faults": (_homt_specs(), None, TRACE),
+        "hemt_clean": (_hemt_specs(), None, None),
+        "hemt_stale_faults": (_hemt_specs(), None, TRACE),
+        "oa_hemt_faults": (_hemt_specs(mitigation=ReskewHandoff()),
+                           AdaptivePlan, TRACE),
+    }
+    for name, (specs, adaptive_cls, trace) in variants.items():
+
+        def _solve(s=specs, a=adaptive_cls, f=trace):
+            run_job_cache_clear()   # time the solve, not the LRU hit
+            return run_job(_nodes(), s,
+                           adaptive=a() if a is not None else None,
+                           faults=f)
+
+        sched, us = timed(_solve, repeat=5)
+        comps[name] = sched.completion
+        out.append(BenchRow(
+            f"faults/{name}", us,
+            f"completion={sched.completion:.3f};stages={STAGES}"))
+    comps.update((k, v) for k, v in scenario_completions().items()
+                 if k == "clairvoyant_faults")
+    out.append(BenchRow(
+        "faults/spot_ordering", 0.0,
+        f"oa_beats_stale={comps['oa_hemt_faults'] < comps['hemt_stale_faults']};"
+        f"homt_graceful={comps['homt_faults'] < 2.0 * comps['homt_clean']};"
+        f"stale_collapses={comps['hemt_stale_faults'] > 2.0 * comps['hemt_clean']};"
+        f"oa_vs_clairvoyant="
+        f"{comps['oa_hemt_faults'] / comps['clairvoyant_faults']:.3f}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

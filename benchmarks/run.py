@@ -10,8 +10,8 @@
 at 1k/10k/100k tasks (benchmarks.bench_sim_engine) and the kernel rows
 (benchmarks.bench_kernels) — so successive PRs can diff BENCH_sim.json.
 
-``--check [PATH]`` re-runs only the gated sections — the sim_engine rows
-and the speculation_io rows — and exits non-zero if any timed row
+``--check [PATH]`` re-runs only the gated sections — the sim_engine,
+speculation_io, and faults rows — and exits non-zero if any timed row
 regressed by more than the threshold against the committed baseline (or
 vanished from the fresh run) — the ROADMAP CI gate.  The
 threshold defaults to 2x and can be overridden per environment —
@@ -40,6 +40,7 @@ MODULES = [
     "benchmarks.bench_hemt_dp",
     "benchmarks.bench_speculation",
     "benchmarks.bench_speculation_io",
+    "benchmarks.bench_faults",
     "benchmarks.bench_oa_hemt",
     "benchmarks.bench_sim_engine",
     "benchmarks.bench_kernels",
@@ -49,6 +50,7 @@ MODULES = [
 JSON_SECTIONS = {
     "benchmarks.bench_speculation": "speculation",
     "benchmarks.bench_speculation_io": "speculation_io",
+    "benchmarks.bench_faults": "faults",
     "benchmarks.bench_oa_hemt": "oa_hemt",
     "benchmarks.bench_sim_engine": "sim",
     "benchmarks.bench_kernels": "kernels",
@@ -58,6 +60,7 @@ JSON_SECTIONS = {
 GATED_SECTIONS = {
     "sim": "benchmarks.bench_sim_engine",
     "speculation_io": "benchmarks.bench_speculation_io",
+    "faults": "benchmarks.bench_faults",
 }
 
 DEFAULT_THRESHOLD = 2.0
@@ -118,7 +121,8 @@ def compare_rows(baseline_rows, fresh_rows,
 def run_check(baseline_path: str, fresh_rows=None,
               threshold: "float | None" = None) -> int:
     """The ``--check`` CI gate: fresh rows of every gated section
-    (``GATED_SECTIONS``: sim_engine + speculation_io) vs. the committed
+    (``GATED_SECTIONS``: sim_engine + speculation_io + faults) vs. the
+    committed
     baseline.  ``fresh_rows`` can be injected for tests — either a dict
     ``{section: [row dicts]}`` (only the given sections are compared) or
     a plain list of ``BenchRow.as_dict`` dicts, compared as the ``sim``
@@ -176,7 +180,7 @@ def main() -> None:
     parser.add_argument("--check", nargs="?", const="BENCH_sim.json",
                         default=None, metavar="PATH",
                         help="re-run the gated rows (sim_engine + "
-                             "speculation_io) and exit non-zero on "
+                             "speculation_io + faults) and exit non-zero on "
                              "us_per_call regressions beyond the "
                              "threshold vs the given baseline JSON "
                              "(default: BENCH_sim.json)")

@@ -23,6 +23,7 @@ for differential tests:
    ====================================  =====================  ==============
    input shape                           chosen path            complexity
    ====================================  =====================  ==============
+   fault-injected stage (``faults=``)    ``event``              O(T log n)
    any multi-segment speed profile       ``event``              O(T log n)
    static, const speeds, no eff. I/O     ``closed-static``      O(T) numpy
    pull, uniform tasks, no eff. I/O,     ``closed-pull``        O(T) numpy
@@ -55,7 +56,10 @@ for differential tests:
    never delay a completion) or no task has ``datanode >= 0`` with positive
    ``io_mb``.  Anything else takes the event calendar, which reproduces the
    oracle's completion times to float round-off (differential tests pin both
-   paths to ``_run_stage`` at 1e-9).
+   paths to ``_run_stage`` at 1e-9).  A fault-injected stage (a non-empty
+   ``faults=`` :class:`~repro.core.faults.FaultTrace`) always routes to the
+   event calendar: kills, drains and recoveries are point events the closed
+   forms cannot express.
 
 3. **Whole jobs** (:func:`run_job`): an S-stage sequence of
    :class:`PullSpec`/:class:`StaticSpec` stages separated by program
@@ -95,7 +99,21 @@ for differential tests:
    differential tests pin the engine against naive per-event oracles
    (tests/test_speculation.py, tests/test_speculation_io.py).
 
-5. **Online adaptation** (:class:`AdaptivePlan`): the paper's full §5
+5. **Fault injection** (``repro.core.faults``): every layer accepts
+   ``faults=`` — a :class:`~repro.core.faults.FaultTrace` of
+   :class:`~repro.core.faults.NodeCrash` / :class:`~repro.core.faults.
+   SpotPreemption` events with a :class:`~repro.core.faults.RetryPolicy`
+   and optional grain-boundary checkpointing.  ``run_stage_events`` kills
+   the victim's in-flight attempt (its uplink flow freed through the same
+   causal ``drop_flow`` repricing losers use), re-queues the residual per
+   the retry policy, and composes with speculation (a surviving copy
+   becomes the primary attempt).  ``run_job`` keeps the solve caches
+   honest — see the run_job docstring — because faults break
+   start-invariance.  Exact semantics live in the ``faults`` module
+   docstring, pinned by the naive full-rescan fault oracle in
+   tests/test_faults.py.
+
+6. **Online adaptation** (:class:`AdaptivePlan`): the paper's full §5
    OA-HeMT loop at ``run_job`` scale.  ``run_job(..., adaptive=plan)``
    feeds every stage's observed per-node (executed work, busy time) into
    the plan's :class:`~repro.core.estimators.ARSpeedEstimator` at the
@@ -135,6 +153,7 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.estimators import ARSpeedEstimator
+from repro.core.faults import ALIVE, DEAD, DRAINING, FaultTrace, lost_work
 from repro.core.partitioner import hemt_split_floats, proportional_split
 from repro.core.simulator import (
     SimNode, SimTask, StageResult, TaskRecord, _stage_result,
@@ -221,7 +240,8 @@ class ProfileCursor:
 def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
                      pull: bool, uplink_bw: Optional[float] = None,
                      start_time: float = 0.0,
-                     mitigation=None) -> StageResult:
+                     mitigation=None, faults: Optional[FaultTrace] = None,
+                     ) -> StageResult:
     """Event-calendar equivalent of the legacy ``_run_stage`` rescan loop.
 
     Semantics match the oracle: tasks pipeline I/O and CPU concurrently and
@@ -242,6 +262,16 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
     its flow and reprices the survivors causally at that instant.  A node
     whose only attempts were cancelled produces no record and keeps its
     previous ``node_finish`` (it completed nothing).
+
+    ``faults`` injects a :class:`~repro.core.faults.FaultTrace`: kill /
+    drain / recover sub-events ride the same heap as point events ordered
+    *before* any same-instant completion of the same node, a kill frees
+    the victim's flow through ``drop_flow`` and re-queues the residual per
+    the trace's retry policy, and a surviving speculative copy becomes the
+    primary attempt.  Exact semantics (checkpoint flooring, re-queue
+    destinations, retry accounting, tie rules) are specified in the
+    ``repro.core.faults`` module docstring and pinned by the naive
+    full-rescan fault oracle in tests/test_faults.py.
     """
     n = len(nodes)
     shared = deque(queues[0]) if pull else None
@@ -285,6 +315,25 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
     node_finish = {nd.name: start_time for nd in nodes}
     records: List[TaskRecord] = []
 
+    # ---- fault state (repro.core.faults semantics) -----------------------
+    if faults is not None and not faults.events:
+        faults = None
+    dead = [False] * n
+    draining = [False] * n
+    requeues: Dict[int, int] = {}      # task_id -> kill-requeues so far
+    penalty: Dict[int, float] = {}     # task_id -> pending relaunch penalty
+    fevents: List[Tuple[float, int, str]] = []
+    if faults is not None:
+        if faults.max_node() >= n:
+            raise ValueError(
+                f"fault trace names node {faults.max_node()} but the stage "
+                f"has {n} nodes")
+        for i in range(n):
+            st = faults.state_at(i, start_time)
+            dead[i] = st == DEAD
+            draining[i] = st == DRAINING
+        fevents = faults.sub_events(start_time)
+
     def push(t: float, i: int) -> None:
         version[i] += 1
         heapq.heappush(heap, (t, i, version[i]))
@@ -321,7 +370,9 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
             push(now + io_left[i] / rate, i)
 
     def start_task(i: int, tk: SimTask, now: float) -> None:
-        launch = now + overheads[i]
+        # a re-queued task's pending relaunch penalty (RetryPolicy backoff)
+        # is consumed at its next launch, wherever it lands
+        launch = now + overheads[i] + penalty.pop(tk.task_id, 0.0)
         task[i] = tk
         t_started[i] = now
         launch_at[i] = launch
@@ -354,6 +405,8 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
         reprice(d, now)
 
     def refill(i: int, now: float) -> None:
+        if dead[i] or draining[i]:
+            return                     # dead/draining nodes pull nothing new
         if pull:
             nxt = shared.popleft() if shared else None
         else:
@@ -391,6 +444,115 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
             return attempt_work[k]
         return cursors[k].work_between(now, cpu_done[k])
 
+    # ---- fault handlers (repro.core.faults semantics) --------------------
+    def wake_idle(now: float) -> None:
+        """Hand queued work to idle usable nodes, ascending index (after a
+        kill re-queued work or a recovery brought capacity back)."""
+        for k in range(n):
+            if task[k] is None:
+                refill(k, now)
+
+    def real_task(tk: SimTask) -> bool:
+        """Zero-work, zero-byte tasks (an adaptive alive-masked replan
+        parks them on dead nodes) are never worth waiting a recovery out
+        for — they redistribute immediately instead of serializing the
+        stage on a no-op."""
+        return tk.cpu_work > _EPS or tk.io_mb > _EPS
+
+    def requeue_task(tk: SimTask, victim: int, now: float) -> None:
+        """Queue a task whose node died: pull goes to the back of the
+        shared deque; a static victim that recovers later re-executes it on
+        recovery (front of its own queue); otherwise the least-loaded alive
+        non-draining node takes it (remaining attempt work + queued work,
+        ties to the lowest index), falling back to the earliest-recovering
+        dead node.  No candidate at all: the work is stranded."""
+        if pull:
+            shared.append(tk)
+            return
+        if faults.recovery_after(victim, now) is not None and real_task(tk):
+            private[victim].appendleft(tk)
+            return
+        best, best_load = -1, math.inf
+        for j in range(n):
+            if dead[j] or draining[j]:
+                continue
+            load = (remaining_work(j, now) if task[j] is not None else 0.0) \
+                + sum(q.cpu_work for q in private[j])
+            if load < best_load:
+                best, best_load = j, load
+        if best < 0:
+            best_rec = math.inf
+            for j in range(n):
+                rec = faults.recovery_after(j, now)
+                if rec is not None and rec < best_rec:
+                    best, best_rec = j, rec
+        if best >= 0:
+            private[best].append(tk)
+
+    def shed_queue(i: int, now: float) -> None:
+        """A dead static node's private queue: real tasks wait out a
+        future recovery (none scheduled: all redistribute); zero-work
+        zero-byte tasks redistribute immediately either way."""
+        if pull or not private[i]:
+            return
+        if faults.recovery_after(i, now) is None:
+            while private[i]:
+                requeue_task(private[i].popleft(), i, now)
+            return
+        movers = [tk for tk in private[i] if not real_task(tk)]
+        if movers:
+            stay = [tk for tk in private[i] if real_task(tk)]
+            private[i].clear()
+            private[i].extend(stay)
+            for tk in movers:
+                requeue_task(tk, i, now)
+
+    def fault_kill(i: int, now: float) -> None:
+        dead[i] = True
+        draining[i] = False
+        tk = task[i]
+        if tk is not None:
+            executed = attempt_work[i] - remaining_work(i, now)
+            saved = 0.0
+            g = faults.checkpoint_grain
+            if g > 0.0 and executed > 0.0:
+                saved = min(math.floor((executed + _EPS) / g) * g,
+                            attempt_work[i])
+            if saved > _EPS:
+                # grain-boundary checkpoint: the saved prefix survives as a
+                # partial record ending at the kill instant
+                records.append(TaskRecord(tk.task_id, nodes[i].name,
+                                          t_started[i], now, saved))
+                node_finish[nodes[i].name] = now
+            surviving_copy = twin[i]
+            task[i] = None
+            version[i] += 1            # drop the pending completion event
+            drop_flow(i, now)          # free the flow, reprice survivors
+            if surviving_copy >= 0:
+                # the racing copy outlives its victim and becomes the
+                # task's only attempt: nothing re-queues, no retry charged
+                twin[i] = twin[surviving_copy] = -1
+            else:
+                rem = attempt_work[i] - saved
+                if rem > _EPS:
+                    k = requeues.get(tk.task_id, 0)
+                    if k < faults.retry.max_attempts - 1:
+                        requeues[tk.task_id] = k + 1
+                        pen = faults.retry.penalty(k + 1)
+                        if pen > 0.0:
+                            penalty[tk.task_id] = pen
+                        # a restart re-fetches input proportional to the
+                        # work it still has to do
+                        if attempt_io[i] > _EPS and attempt_work[i] > _EPS:
+                            io = attempt_io[i] * rem / attempt_work[i]
+                        else:
+                            io = 0.0
+                        requeue_task(
+                            SimTask(rem, io, tk.datanode if io > _EPS else -1,
+                                    task_id=tk.task_id), i, now)
+                    # else: retries exhausted — the residual is abandoned
+        shed_queue(i, now)
+
     def offer_mitigation(now: float) -> None:
         """Fixpoint mitigation sweep (speculation-module semantics): offer
         idle nodes in ascending index; restart after each accepted action;
@@ -412,8 +574,9 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
             by_node = {r.node: r for r in running}
             acted = False
             for k in range(n):
-                if task[k] is not None:
-                    continue
+                if task[k] is not None or dead[k] or draining[k]:
+                    continue          # mitigation never offers a dead or
+                    #                   draining node new work
                 if shared if pull else private[k]:
                     continue          # not idle: work still queued
                 act = mitigation.offer(done_durations, running, now)
@@ -465,7 +628,8 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
                 break                 # state changed: restart the sweep
             if not acted:
                 for k in range(n):
-                    if task[k] is not None or (shared if pull else private[k]):
+                    if (task[k] is not None or dead[k] or draining[k]
+                            or (shared if pull else private[k])):
                         continue
                     nc = mitigation.next_check(done_durations, running, now)
                     if nc is not None:
@@ -473,16 +637,46 @@ def run_stage_events(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask
                 return
 
     for i in range(n):
+        if dead[i] or draining[i]:
+            continue                   # not primed: pulls nothing at start
         if pull:
             if shared:
                 start_task(i, shared.popleft(), start_time)
         elif private[i]:
             start_task(i, private[i].popleft(), start_time)
+    if faults is not None:
+        if not pull:
+            # nodes dead at the start shed what should not wait for them
+            # (everything without a future recovery; no-op tasks always)
+            for i in range(n):
+                if dead[i]:
+                    shed_queue(i, start_time)
+            wake_idle(start_time)
+        # fault sub-events ride the heap with negative versions: they
+        # bypass the version-skip, order before any same-instant completion
+        # of the same node, and keep the trace's (t, node, rank) order
+        # among themselves
+        nf = len(fevents)
+        for idx, (ft, fnode, _) in enumerate(fevents):
+            heapq.heappush(heap, (ft, fnode, idx - nf))
     if mitigation is not None:
         offer_mitigation(start_time)
 
     while heap:
         t, i, ver = heapq.heappop(heap)
+        if ver < 0:
+            kind = fevents[ver + len(fevents)][2]
+            if kind == "kill":
+                fault_kill(i, t)
+                wake_idle(t)           # re-queued work may land on idlers
+            elif kind == "drain":
+                draining[i] = True
+            else:                      # recover
+                dead[i] = False
+                wake_idle(t)
+            if mitigation is not None:
+                offer_mitigation(t)
+            continue
         if ver != version[i]:
             continue
         if task[i] is None:
@@ -923,14 +1117,21 @@ def _closed_form_pull_io_sym(nodes: Sequence[SimNode],
 
 def simulate_stage(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
                    pull: bool, uplink_bw: Optional[float] = None,
-                   start_time: float = 0.0, mitigation=None) -> StageResult:
+                   start_time: float = 0.0, mitigation=None,
+                   faults: Optional[FaultTrace] = None) -> StageResult:
     """Run one stage on the fastest applicable path (see module docstring).
 
     ``mitigation`` must be an event-level policy (SpeculativeCopies /
     WorkStealing); mitigated stages always take the event calendar — the
     closed forms model no cancel/re-launch events.  Barrier-level policies
     (ReskewHandoff) are applied by :func:`run_job`, not per stage.
+    ``faults`` (a non-empty :class:`~repro.core.faults.FaultTrace`) also
+    forces the event calendar — kills/drains/recoveries are point events
+    with no closed form.
     """
+    if faults is not None and faults.events:
+        return run_stage_events(nodes, queues, pull, uplink_bw, start_time,
+                                mitigation, faults)
     if mitigation is not None:
         return run_stage_events(nodes, queues, pull, uplink_bw, start_time,
                                 mitigation)   # validates the policy kind
@@ -1155,14 +1356,16 @@ def _rel_summary(nodes: Sequence[SimNode], speeds: Sequence[float],
 
 
 def _abs_summary(nodes: Sequence[SimNode], spec, uplink_bw: Optional[float],
-                 start: float) -> StageSummary:
-    """Non-shiftable fallback (multi-segment profiles): run the stage at its
-    true absolute start through the auto-selecting engine."""
+                 start: float,
+                 faults: Optional[FaultTrace] = None) -> StageSummary:
+    """Non-shiftable fallback (multi-segment profiles, fault-affected
+    windows): run the stage at its true absolute start through the
+    auto-selecting engine."""
     mit = spec.mitigation if is_event_policy(spec.mitigation) else None
     res = simulate_stage(nodes, _spec_tasks(spec),
                          pull=not isinstance(spec, StaticSpec),
                          uplink_bw=uplink_bw, start_time=start,
-                         mitigation=mit)
+                         mitigation=mit, faults=faults)
     names = [nd.name for nd in nodes]
     _, idle, offs, counts, wexec = _rel_summary_from_result(res, names, start)
     return StageSummary(start, res.completion, idle,
@@ -1314,7 +1517,20 @@ class AdaptivePlan:
         self.history: List[AdaptiveStageLog] = []
 
     def _split_with(self, speeds: Sequence[float], total: float,
-                    ) -> List[float]:
+                    alive: Optional[Sequence[bool]] = None) -> List[float]:
+        if alive is not None and not all(alive):
+            # fault-aware re-split (run_job barriers): dead/draining nodes
+            # get zero work, survivors split the whole total among
+            # themselves (min_units floor applies to survivors only);
+            # nobody alive falls back to the full split — the stage will
+            # strand either way and the planned shape is as good as any
+            idx = [i for i, a in enumerate(alive) if a]
+            if idx:
+                sub = self._split_with([speeds[i] for i in idx], total)
+                out = [0.0] * len(speeds)
+                for i, w in zip(idx, sub):
+                    out[i] = w
+                return out
         n = len(speeds)
         if not any(s > 0.0 for s in speeds):
             # V = 0 (every executor cold/zero-speed at this barrier):
@@ -1351,18 +1567,23 @@ class AdaptivePlan:
                 += remainder
         return works
 
-    def split(self, names: Sequence[str], total: float) -> List[float]:
+    def split(self, names: Sequence[str], total: float,
+              alive: Optional[Sequence[bool]] = None) -> List[float]:
         """The current estimates' HeMT split of ``total`` work."""
-        return self._split_with(self.estimator.speeds(names), total)
+        return self._split_with(self.estimator.speeds(names), total, alive)
 
-    def replan(self, names: Sequence[str], spec):
+    def replan(self, names: Sequence[str], spec,
+               alive: Optional[Sequence[bool]] = None):
         """Re-derive a StaticSpec's split from the current estimates (any
         reskew residual has already been folded into ``spec.works``).
-        Returns the spec to solve; logs it either way."""
+        ``alive`` (run_job under a fault trace) restricts the split to the
+        nodes alive at the barrier — survivors keep their AR(1) estimates,
+        dead/draining nodes get zero work.  Returns the spec to solve;
+        logs it either way."""
         k = len(self.history)
         if isinstance(spec, StaticSpec) and self.estimator.known():
             speeds = self.estimator.speeds(names)
-            works = tuple(self._split_with(speeds, sum(spec.works)))
+            works = tuple(self._split_with(speeds, sum(spec.works), alive))
             self.history.append(
                 AdaptiveStageLog(k, works, tuple(speeds), True))
             return StaticSpec(works=works, mitigation=spec.mitigation,
@@ -1388,7 +1609,8 @@ class AdaptivePlan:
 def run_job(nodes: Sequence[SimNode], stages: Sequence,
             uplink_bw: Optional[float] = None,
             start_time: float = 0.0,
-            adaptive: Optional[AdaptivePlan] = None) -> JobSchedule:
+            adaptive: Optional[AdaptivePlan] = None,
+            faults: Optional[FaultTrace] = None) -> JobSchedule:
     """Run a whole multi-stage job: each stage starts at the previous
     stage's completion (program barrier).
 
@@ -1419,6 +1641,27 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
     (the id() level never sees a re-planned spec twice), so adaptive
     stages can only share cache entries with identical splits — whose
     solves are identical.
+
+    ``faults`` (a :class:`~repro.core.faults.FaultTrace` on the job's
+    absolute clock) breaks start-invariance, handled honestly: each stage
+    is first solved fault-free (cacheable as ever), and when its
+    ``[start, completion]`` window overlaps a fault window — faults only
+    *remove* capacity, so the fault-free span lower-bounds the true one
+    and a non-overlapping window is exactly valid — the stage is re-solved
+    on the absolute-time event path, bypassing **both** cache levels; the
+    LRU only ever stores fault-free solves (pinned by the no-poisoning
+    test in tests/test_faults.py).  At a fault-affected barrier, work the
+    stage abandoned (retries exhausted / stranded) folds into the next
+    stage's split via its :class:`~repro.core.speculation.ReskewHandoff`
+    proportional to observed survivor throughput (without one the loss is
+    eaten — HomT-style pull stages re-queue internally and rarely abandon
+    anything); the straggler *cut* itself is skipped on fault-affected
+    stages (its residual recompute assumes fault-free execution).  With
+    ``adaptive``, each upcoming static stage is re-split over the nodes
+    alive at its barrier — survivors keep their AR(1) estimates — and a
+    crash marked ``cold_restart=True`` forgets the node's estimate at its
+    recovery barrier so the replacement cold-starts at the survivor mean
+    (paper §5.1).
     """
     speeds = _constant_speeds(nodes)
     names = [nd.name for nd in nodes]
@@ -1436,16 +1679,32 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
     carry: Optional[Tuple[float, List[float]]] = None   # (residual, vhat)
     folded_alive: List = []   # keeps folded temporaries alive: by_id keys
     # are id()s, which CPython reuses once an object is collected
+    if faults is not None and not faults.events:
+        faults = None
+    # cold-restart recoveries not yet past: forget the node's estimate at
+    # the first barrier at/after its replacement comes up (§5.1)
+    cold_pending = deque(faults.cold_restarts()) if faults is not None else ()
     for k, spec in enumerate(stage_list):
         if carry is not None and _spec_n_tasks(spec):
             spec = _fold_spec(spec, carry[0], carry[1])
             folded_alive.append(spec)
             carry = None
         if adaptive is not None:
-            spec = adaptive.replan(names, spec)
+            alive = None
+            if faults is not None:
+                while cold_pending and cold_pending[0][0] <= t + _EPS:
+                    adaptive.estimator.forget(names[cold_pending.popleft()[1]])
+                mask = faults.alive_mask(len(nodes), t)
+                if not all(mask):
+                    alive = mask
+            spec = adaptive.replan(names, spec, alive)
             folded_alive.append(spec)
+        faulted = False
         if speeds is None:
             summ = _abs_summary(nodes, spec, uplink_bw, t)
+            if faults is not None and faults.overlaps(t, summ.completion):
+                faulted = True
+                summ = _abs_summary(nodes, spec, uplink_bw, t, faults)
         else:
             rel = by_id.get(id(spec))
             if rel is None:
@@ -1471,12 +1730,31 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
                 {nm: t + o for nm, o in zip(names, offs)},
                 {nm: c for nm, c in zip(names, counts)},
                 {nm: w for nm, w in zip(names, wexec)})
+            if faults is not None and faults.overlaps(t, summ.completion):
+                # the fault-free solve above stays cached (it is a valid
+                # fault-free solve); the fault-affected one replacing it
+                # is never stored in either cache level
+                faulted = True
+                summ = _abs_summary(nodes, spec, uplink_bw, t, faults)
         if (isinstance(spec, StaticSpec)
                 and isinstance(spec.mitigation, ReskewHandoff)
                 and k + 1 < len(stage_list)):
-            summ, residual, vhat = _apply_reskew(nodes, spec, summ, names)
-            if residual > 0.0:
-                carry = (residual, vhat)
+            if faulted:
+                # no straggler cut on a fault-affected stage (the cut's
+                # residual recompute assumes fault-free execution); its
+                # abandoned work still folds forward through the handoff,
+                # proportional to observed survivor throughput
+                lost = lost_work(_spec_total_work(spec),
+                                 sum(summ.work.values()))
+                if lost > 0.0:
+                    offs = [summ.node_finish[nm] - summ.start for nm in names]
+                    vhat = [summ.work.get(nm, 0.0) / o if o > 0.0 else 0.0
+                            for nm, o in zip(names, offs)]
+                    carry = (lost, vhat)
+            else:
+                summ, residual, vhat = _apply_reskew(nodes, spec, summ, names)
+                if residual > 0.0:
+                    carry = (residual, vhat)
         if adaptive is not None:
             adaptive.observe(names, summ)
         summaries.append(summ)
@@ -1488,3 +1766,9 @@ def _spec_n_tasks(spec) -> int:
     if isinstance(spec, StaticSpec):
         return len(spec.works)
     return spec.n_tasks if spec.works is None else len(spec.works)
+
+
+def _spec_total_work(spec) -> float:
+    if isinstance(spec, StaticSpec):
+        return float(sum(spec.works))
+    return float(spec.work_array().sum())

@@ -286,36 +286,44 @@ def _run_stage(nodes: Sequence[SimNode], queues: List[List[SimTask]],
 
 def run_pull_stage(nodes: Sequence[SimNode], tasks: Sequence[SimTask],
                    uplink_bw: Optional[float] = None,
-                   start_time: float = 0.0, mitigation=None) -> StageResult:
+                   start_time: float = 0.0, mitigation=None,
+                   faults=None) -> StageResult:
     """HomT: shared queue, idle nodes pull (paper Claim 1 setting).
 
     Rides the fast-path engine: vectorized closed form for uniform tasks on
     constant-speed nodes without effective I/O, event calendar otherwise.
     ``mitigation`` (an event-level policy from ``repro.core.speculation``)
     adds straggler speculation / work stealing on the event calendar.
+    ``faults`` (a ``repro.core.faults.FaultTrace``) injects node crashes /
+    spot preemptions; killed work re-enters the shared queue.
     """
     from repro.core.engine import simulate_stage
     return simulate_stage(nodes, [tasks], pull=True, uplink_bw=uplink_bw,
-                          start_time=start_time, mitigation=mitigation)
+                          start_time=start_time, mitigation=mitigation,
+                          faults=faults)
 
 
 def run_static_stage(nodes: Sequence[SimNode],
                      assignments: Sequence[Sequence[SimTask]],
                      uplink_bw: Optional[float] = None,
-                     start_time: float = 0.0, mitigation=None) -> StageResult:
+                     start_time: float = 0.0, mitigation=None,
+                     faults=None) -> StageResult:
     """HeMT: one (or more) pre-assigned macrotasks per node.
 
     Rides the fast-path engine: per-node vectorized cumsum for constant
     speeds without effective I/O, event calendar otherwise.  ``mitigation``
     (an event-level policy from ``repro.core.speculation``) lets idle nodes
-    speculate on or steal from straggling macrotasks.
+    speculate on or steal from straggling macrotasks.  ``faults`` (a
+    ``repro.core.faults.FaultTrace``) injects node crashes / spot
+    preemptions; a dead node's macrotasks are re-executed on recovery or
+    redistributed to survivors per the trace's retry policy.
     """
     if len(assignments) != len(nodes):
         raise ValueError("need one task list per node")
     from repro.core.engine import simulate_stage
     return simulate_stage(nodes, assignments, pull=False,
                           uplink_bw=uplink_bw, start_time=start_time,
-                          mitigation=mitigation)
+                          mitigation=mitigation, faults=faults)
 
 
 _ENGINE_EXPORTS = ("run_job", "PullSpec", "StaticSpec", "JobSchedule",

@@ -51,9 +51,14 @@ def verify_claim1(total_work: float, n_tasks: int, speeds: Sequence[float],
 
 @dataclass
 class StragglerReport:
+    """One flagged executor.  ``index`` is positional within the rate list
+    handed to :func:`detect_stragglers` — under an elastic fleet that list
+    shrinks as nodes die, so consumers that outlive one call
+    (``FleetMonitor``) attach the stable slice ``name``."""
     index: int
     rate: float
     zscore: float
+    name: str = ""
 
 
 def detect_stragglers(rates: Sequence[float], z_threshold: float = -1.5,
@@ -97,12 +102,17 @@ def speculative_copies(records_end: Dict[int, Optional[float]], now: float,
 
 
 def rebalance_after_loss(weights: Sequence[float], lost: Sequence[int],
-                         cold_start: str = "mean") -> List[float]:
+                         cold_start: str = "mean") -> Dict[int, float]:
     """HeMT elastic response to node loss: drop lost executors, renormalize.
+
+    Returns ``{surviving original index: renormalized weight}`` so callers
+    can map each weight back to the executor it belongs to — a bare
+    renormalized list loses that mapping the moment indices shift.
     (Speeds of later replacement nodes get the cold-start rule — see
     estimators.ARSpeedEstimator.speeds.)"""
-    kept = [w for i, w in enumerate(weights) if i not in set(lost)]
+    lost_set = set(lost)
+    kept = [(i, w) for i, w in enumerate(weights) if i not in lost_set]
     if not kept:
         raise ValueError("all executors lost")
-    s = sum(kept)
-    return [w / s for w in kept]
+    s = sum(w for _, w in kept)
+    return {i: w / s for i, w in kept}

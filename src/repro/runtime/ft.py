@@ -59,6 +59,7 @@ class FleetMonitor:
         self.rates: Dict[str, float] = {}
         self.events: List[FleetEvent] = []
         self._dead: set = set()
+        self._straggling: set = set()   # open straggler episodes, by name
 
     # ------------------------------------------------------------------
     def heartbeat(self, hb: Heartbeat) -> None:
@@ -70,7 +71,13 @@ class FleetMonitor:
             self.events.append(FleetEvent("recovered", hb.slice_name, hb.at))
 
     def check(self, now: float) -> Tuple[List[str], List[StragglerReport]]:
-        """Returns (newly dead slices, current stragglers)."""
+        """Returns (newly dead slices, current stragglers).
+
+        Straggler events carry the stable slice *name* (the report index is
+        alive-local and shifts as nodes die) and are deduplicated per
+        episode: one "straggler" event when a slice starts lagging, one
+        "recovered" event when it stops (or nothing further if it dies —
+        the heartbeat path owns dead/recovered transitions)."""
         newly_dead = []
         for name, seen in self.last_seen.items():
             if name not in self._dead and now - seen > self.timeout:
@@ -83,12 +90,21 @@ class FleetMonitor:
         rates = [self.rates.get(n, 0.0) for n in alive]
         stragglers = detect_stragglers(rates, self.z_threshold)
         reports = []
+        current = set()
         for s in stragglers:
             name = alive[s.index]
-            reports.append(StragglerReport(s.index, s.rate, s.zscore))
-            self.events.append(FleetEvent(
-                "straggler", name, now,
-                f"rate {s.rate:.2f} grains/s, z={s.zscore:.2f}"))
+            current.add(name)
+            reports.append(StragglerReport(s.index, s.rate, s.zscore, name))
+            if name not in self._straggling:
+                self._straggling.add(name)
+                self.events.append(FleetEvent(
+                    "straggler", name, now,
+                    f"rate {s.rate:.2f} grains/s, z={s.zscore:.2f}"))
+        for name in sorted(self._straggling - current):
+            self._straggling.discard(name)
+            if name not in self._dead:
+                self.events.append(FleetEvent(
+                    "recovered", name, now, "straggler episode ended"))
         return newly_dead, reports
 
     def speculation_candidates(self, now: float,
@@ -115,6 +131,7 @@ class FleetMonitor:
         self.last_seen.pop(name, None)
         self.rates.pop(name, None)
         self._dead.discard(name)
+        self._straggling.discard(name)
 
     def add(self, name: str, now: float) -> None:
         self.last_seen[name] = now

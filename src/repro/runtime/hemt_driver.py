@@ -179,8 +179,8 @@ class HeMTTrainer:
         self.reports.append(rep)
         return state, rep
 
-    def run_window(self, state: TrainState, n_steps: int,
-                   ) -> TrainState:
+    def run_window(self, state: TrainState, n_steps: int, *,
+                   faults=None, monitor=None) -> TrainState:
         """OA-HeMT at window scale (mode ``oa-hemt``): schedule the next
         ``n_steps`` gradient barriers in ONE adaptive ``run_job`` call —
         each barrier re-plans the next step's grain split from the shared
@@ -199,32 +199,85 @@ class HeMTTrainer:
         dispatch amortization), whereas ``run_step``'s static stage pays
         the overhead per grain; observed throughputs genuinely differ by
         that amortization.
+
+        ``faults`` (a :class:`~repro.core.faults.FaultTrace` on the fleet
+        clock) injects crashes / spot preemptions into the window's
+        virtual schedule — the driver shifts it to each segment's local
+        clock before handing it to ``run_job``.  The trace is a *timing*
+        model: every grain's gradient still accumulates (the math stays
+        synchronous-equivalent), so use traces whose retry budget covers
+        the window.  ``monitor`` (a :class:`~repro.runtime.ft.
+        FleetMonitor`) closes the detection->recovery loop inside the
+        window: every barrier feeds it per-slice heartbeats (slices that
+        executed work) and runs ``monitor.check``; a dead declaration
+        triggers :func:`repro.runtime.elastic.replan` — survivors keep
+        their AR(1) estimates — drops the dead slices from the fleet, and
+        re-schedules the window's remaining barriers over the survivors.
+        Both are honored in ``oa-hemt`` mode only (the per-step fallback
+        would silently ignore them, so passing them there raises).
         """
-        if self.mode != "oa-hemt" or n_steps <= 0:
+        if self.mode != "oa-hemt":
+            if faults is not None or monitor is not None:
+                raise ValueError(
+                    "faults/monitor wiring needs windowed scheduling "
+                    "(mode='oa-hemt'); other modes schedule per step")
             for _ in range(n_steps):
                 state, _ = self.run_step(state)
             return state
-        nodes = self._sim_nodes()
-        names = [s.name for s in self.slices]
-        plan0 = self.planner.plan(self.n_grains)
-        spec = StaticSpec(works=tuple(g * self.grain_cost
-                                      for g in plan0.grains))
-        adaptive = AdaptivePlan(estimator=self.planner.estimator,
-                                quantum=self.grain_cost,
-                                min_units=self.planner.min_grains)
-        sched = run_job(nodes, [spec] * n_steps, adaptive=adaptive)
-        for s in range(n_steps):
-            summ = sched.stages[s]
-            works = adaptive.history[s].works
-            counts = {nm: int(round(w / self.grain_cost))
-                      for nm, w in zip(names, works)}
-            elapsed = {nm: summ.node_finish[nm] - summ.start for nm in names}
-            step = int(state.step)
-            state, metrics = self._execute_math(state, counts)
-            rep = StepReport(step, self.mode, counts, elapsed, summ.span,
-                             summ.idle_time, float(metrics["loss"]), 0)
-            self.reports.append(rep)
-        self._clock += sched.completion
+        if n_steps <= 0:
+            return state
+        from repro.runtime import elastic
+        from repro.runtime.ft import Heartbeat
+        steps_left = n_steps
+        while steps_left > 0:
+            nodes = self._sim_nodes()
+            names = [s.name for s in self.slices]
+            plan0 = self.planner.plan(self.n_grains)
+            spec = StaticSpec(works=tuple(g * self.grain_cost
+                                          for g in plan0.grains))
+            adaptive = AdaptivePlan(estimator=self.planner.estimator,
+                                    quantum=self.grain_cost,
+                                    min_units=self.planner.min_grains)
+            trace = faults.shift(-self._clock) if faults is not None else None
+            sched = run_job(nodes, [spec] * steps_left, adaptive=adaptive,
+                            faults=trace)
+            clock0 = self._clock
+            newly_dead: List[str] = []
+            ran = 0
+            for s in range(steps_left):
+                summ = sched.stages[s]
+                works = adaptive.history[s].works
+                counts = {nm: int(round(w / self.grain_cost))
+                          for nm, w in zip(names, works)}
+                elapsed = {nm: summ.node_finish[nm] - summ.start
+                           for nm in names}
+                step = int(state.step)
+                state, metrics = self._execute_math(state, counts)
+                rep = StepReport(step, self.mode, counts, elapsed, summ.span,
+                                 summ.idle_time, float(metrics["loss"]), 0)
+                self.reports.append(rep)
+                ran += 1
+                self._clock = clock0 + summ.completion
+                if monitor is not None:
+                    for nm in names:
+                        if counts.get(nm, 0) > 0 and elapsed[nm] > 0.0:
+                            monitor.heartbeat(Heartbeat(
+                                nm, self._clock, counts[nm], elapsed[nm]))
+                    newly_dead, _ = monitor.check(self._clock)
+                    if newly_dead:
+                        break
+            steps_left -= ran
+            if newly_dead:
+                # detection -> recovery inside the window: re-plan over the
+                # survivors (AR(1) estimates kept, paper §5.1) and
+                # re-schedule the remaining barriers without the dead slices
+                gone = set(newly_dead)
+                keep = [i for i, sl in enumerate(self.slices)
+                        if sl.name not in gone]
+                self.slices = [self.slices[i] for i in keep]
+                if faults is not None:
+                    faults = faults.restrict(keep)
+                elastic.replan(self.planner, [sl.name for sl in self.slices])
         return state
 
     def run(self, state: TrainState, n_steps: int,

@@ -11,7 +11,9 @@ except ModuleNotFoundError:
     # that covers the subset this suite uses (given + floats/integers/lists/
     # booleans/sampled_from/just/tuples strategies — tuples and sampled_from
     # are exercised by the randomized multi-stage differential tests in
-    # test_engine.py — plus profile registration as no-ops) so collection
+    # test_engine.py, and the fault differential suites in test_faults.py
+    # ride the same integer-seed pattern — plus profile registration as
+    # no-ops) so collection
     # and the property tests still run: each @given test executes a fixed
     # number of deterministic pseudo-random examples instead of being
     # skipped.  Both branches are continuously exercised: the py3.12 leg of

@@ -1,0 +1,914 @@
+"""Fault injection & recovery vs. a naive full-rescan fault oracle.
+
+The oracle below restates the documented fault semantics (the
+``repro.core.faults`` module docstring) as a rescan-everything loop on top
+of the I/O-mitigation oracle pattern: per-datanode fair-share rates
+recomputed from scratch at every event, full ``SimNode`` profile walks, and
+fault sub-events merged into the event selection by ``(t, node, rank)``
+with recover < drain < kill < any same-instant completion of the same
+node.  Randomized differential suites pin ``run_stage_events(faults=...)``
+— and the ``run_job`` threading of fault traces — against it at 1e-9,
+covering crashes mid-CPU, crashes mid-I/O-drain, crashes of speculation
+victims, recoveries mid-stage, and preemption drains.  A no-poisoning
+suite proves fault-window solves never contaminate the start-invariant
+solve LRU.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.engine import (
+    AdaptivePlan, PullSpec, StaticSpec, _spec_tasks, run_job,
+    run_job_cache_clear, run_stage_events,
+)
+from repro.core.faults import (
+    DEAD, DRAINING, FaultTrace, NodeCrash, RetryPolicy, SpotPreemption,
+    lost_work,
+)
+from repro.core.hdfs_model import DuplicatePlacement
+from repro.core.simulator import (
+    SimNode, SimTask, TaskRecord, _stage_result, run_pull_stage,
+    run_static_stage,
+)
+from repro.core.speculation import (
+    ReskewHandoff, RunningAttempt, Speculate, SpeculativeCopies, WorkStealing,
+)
+
+REL = ABS = 1e-9
+_EPS = 1e-9
+
+# fault sub-events sort below (before) same-instant completions of their
+# node; among themselves a recovery ending one interval precedes the kill
+# starting the next
+_PRIO = {"recover": 0, "drain": 1, "kill": 2,
+         "io": 3, "done": 3, "recheck": 3}
+
+
+def _approx(x):
+    return pytest.approx(x, rel=REL, abs=ABS)
+
+
+# --------------------------------------------------------------------------
+# the oracle: naive rescan loop with faults, per the documented semantics
+# --------------------------------------------------------------------------
+
+def oracle_stage_faults(nodes, queues, pull, faults, uplink_bw=None,
+                        mitigation=None, start_time=0.0):
+    """Full-rescan fault + I/O + mitigation oracle: rates recomputed
+    globally at every event, all flows advanced between events, fault
+    sub-events dispatched by ``(t, node, rank)`` — no incremental state."""
+    n = len(nodes)
+    bw = uplink_bw if uplink_bw else None
+    shared = list(queues[0]) if pull else None
+    private = None if pull else [list(q) for q in queues]
+    busy = [False] * n
+    tid = [0] * n
+    start = [0.0] * n
+    launch = [0.0] * n
+    task_work = [0.0] * n        # the attempt task's cpu_work field
+    task_io = [0.0] * n          # the attempt task's io_mb field (raw)
+    task_dn = [-1] * n           # the attempt task's datanode field (raw)
+    att_work = [0.0] * n         # attempt work (shrinks on steal)
+    att_io = [0.0] * n           # effective attempt bytes (shrinks on steal)
+    io_left = [0.0] * n
+    cpu_done = [0.0] * n
+    twin = [-1] * n
+    copied = set()
+    done = []
+    rechecks = {}
+    records = []
+    node_finish = {nd.name: start_time for nd in nodes}
+    placement = getattr(mitigation, "placement", None)
+
+    f_dead = [faults.state_at(i, start_time) == DEAD for i in range(n)]
+    f_drain = [faults.state_at(i, start_time) == DRAINING for i in range(n)]
+    fpend = list(faults.sub_events(start_time))
+    requeued = {}                # task_id -> kill-requeues so far
+    pen = {}                     # task_id -> pending relaunch penalty
+
+    def dup_dn(d):
+        return d if placement is None else placement.choose(d)
+
+    def flow_active(i):
+        return (busy[i] and bw is not None and task_dn[i] >= 0
+                and io_left[i] > _EPS)
+
+    def rates():
+        cnt = {}
+        for i in range(n):
+            if flow_active(i):
+                cnt[task_dn[i]] = cnt.get(task_dn[i], 0) + 1
+        return {d: bw / c for d, c in cnt.items()}
+
+    def start_attempt(i, task_id, w, io, d, now):
+        busy[i] = True
+        tid[i] = task_id
+        start[i] = now
+        launch[i] = now + nodes[i].task_overhead + pen.pop(task_id, 0.0)
+        task_work[i] = att_work[i] = w
+        task_io[i] = io
+        task_dn[i] = d
+        cpu_done[i] = nodes[i].finish_time(w, launch[i])
+        if bw is not None and d >= 0 and io > _EPS:
+            att_io[i] = io
+            io_left[i] = io
+        else:
+            att_io[i] = 0.0
+            io_left[i] = 0.0
+        rechecks.pop(i, None)
+
+    def refill(i, now):
+        if f_dead[i] or f_drain[i]:
+            return
+        if pull:
+            if shared:
+                tk = shared.pop(0)
+                start_attempt(i, tk.task_id, tk.cpu_work, tk.io_mb,
+                              tk.datanode, now)
+        elif private[i]:
+            tk = private[i].pop(0)
+            start_attempt(i, tk.task_id, tk.cpu_work, tk.io_mb,
+                          tk.datanode, now)
+
+    def remaining(k, now):
+        if now < launch[k]:
+            return att_work[k]
+        return nodes[k].work_between(now, cpu_done[k])
+
+    def queue_empty(i):
+        return not shared if pull else not private[i]
+
+    def wake(now):
+        for k in range(n):
+            if not busy[k]:
+                refill(k, now)
+
+    def real(tk):
+        return tk.cpu_work > _EPS or tk.io_mb > _EPS
+
+    def requeue(tk, victim, now):
+        if pull:
+            shared.append(tk)
+            return
+        if faults.recovery_after(victim, now) is not None and real(tk):
+            private[victim].insert(0, tk)
+            return
+        best, best_load = -1, math.inf
+        for j in range(n):
+            if f_dead[j] or f_drain[j]:
+                continue
+            load = ((remaining(j, now) if busy[j] else 0.0)
+                    + sum(q.cpu_work for q in private[j]))
+            if load < best_load:
+                best, best_load = j, load
+        if best < 0:
+            best_rec = math.inf
+            for j in range(n):
+                rec = faults.recovery_after(j, now)
+                if rec is not None and rec < best_rec:
+                    best, best_rec = j, rec
+        if best >= 0:
+            private[best].append(tk)
+
+    def shed(i, now):
+        if pull or not private[i]:
+            return
+        if faults.recovery_after(i, now) is None:
+            moving, private[i][:] = list(private[i]), []
+        else:
+            moving = [tk for tk in private[i] if not real(tk)]
+            private[i][:] = [tk for tk in private[i] if real(tk)]
+        for tk in moving:
+            requeue(tk, i, now)
+
+    def kill(i, now):
+        f_dead[i] = True
+        f_drain[i] = False
+        if busy[i]:
+            executed = att_work[i] - remaining(i, now)
+            saved = 0.0
+            g = faults.checkpoint_grain
+            if g > 0.0 and executed > 0.0:
+                saved = min(math.floor((executed + _EPS) / g) * g,
+                            att_work[i])
+            if saved > _EPS:
+                records.append(TaskRecord(tid[i], nodes[i].name, start[i],
+                                          now, saved))
+                node_finish[nodes[i].name] = now
+            surv = twin[i]
+            busy[i] = False
+            io_left[i] = 0.0
+            if surv >= 0:
+                twin[i] = twin[surv] = -1
+            else:
+                rem = att_work[i] - saved
+                if rem > _EPS:
+                    k = requeued.get(tid[i], 0)
+                    if k < faults.retry.max_attempts - 1:
+                        requeued[tid[i]] = k + 1
+                        p = faults.retry.penalty(k + 1)
+                        if p > 0.0:
+                            pen[tid[i]] = p
+                        if att_io[i] > _EPS and att_work[i] > _EPS:
+                            io = att_io[i] * rem / att_work[i]
+                        else:
+                            io = 0.0
+                        requeue(SimTask(rem, io,
+                                        task_dn[i] if io > _EPS else -1,
+                                        task_id=tid[i]), i, now)
+        shed(i, now)
+
+    def offer_all(now):
+        while True:
+            running = [RunningAttempt(k, tid[k], start[k], att_work[k],
+                                      remaining(k, now), tid[k] in copied,
+                                      att_io[k])
+                       for k in range(n) if busy[k]]
+            if not running:
+                return
+            by_node = {r.node: r for r in running}
+            acted = False
+            for k in range(n):
+                if busy[k] or f_dead[k] or f_drain[k] or not queue_empty(k):
+                    continue
+                act = mitigation.offer(done, running, now)
+                if act is None:
+                    continue
+                victim = by_node[act.victim]
+                j = act.victim
+                if isinstance(act, Speculate):
+                    copied.add(victim.task_id)
+                    start_attempt(k, victim.task_id, task_work[j],
+                                  task_io[j], dup_dn(task_dn[j]), now)
+                    twin[k] = j
+                    twin[j] = k
+                else:                  # Steal
+                    moved = 0.0
+                    if att_io[j] > _EPS and victim.work > 0.0:
+                        moved = att_io[j] * act.amount / victim.work
+                        att_io[j] -= moved
+                    att_work[j] -= act.amount
+                    cpu_done[j] = nodes[j].finish_time(
+                        victim.remaining - act.amount, max(now, launch[j]))
+                    if moved > 0.0:
+                        io_left[j] = max(0.0, io_left[j] - moved)
+                    start_attempt(k, victim.task_id, act.amount, moved,
+                                  dup_dn(task_dn[j]) if moved > _EPS
+                                  else -1, now)
+                acted = True
+                break
+            if not acted:
+                for k in range(n):
+                    if (busy[k] or f_dead[k] or f_drain[k]
+                            or not queue_empty(k)):
+                        continue
+                    nc = mitigation.next_check(done, running, now)
+                    if nc is not None:
+                        rechecks[k] = nc
+                return
+
+    def complete(i, now):
+        records.append(TaskRecord(tid[i], nodes[i].name, start[i], now,
+                                  att_work[i]))
+        node_finish[nodes[i].name] = now
+        busy[i] = False
+        io_left[i] = 0.0
+        if mitigation is None:
+            refill(i, now)
+            return
+        done.append(now - start[i])
+        loser = twin[i]
+        if loser >= 0:
+            twin[i] = twin[loser] = -1
+            busy[loser] = False
+            io_left[loser] = 0.0
+        refill(i, now)
+        if loser >= 0:
+            refill(loser, now)
+        offer_all(now)
+
+    for i in range(n):
+        if f_dead[i] or f_drain[i]:
+            continue
+        refill(i, start_time)
+    if not pull:
+        for i in range(n):
+            if f_dead[i]:
+                shed(i, start_time)
+        wake(start_time)
+    if mitigation is not None:
+        offer_all(start_time)
+
+    t = start_time
+    guard = 0
+    while any(busy) or rechecks or fpend:
+        guard += 1
+        assert guard < 1_000_000, "oracle runaway"
+        cur = rates()
+        events = []
+        for i in range(n):
+            if not busy[i]:
+                continue
+            if flow_active(i):
+                events.append((t + io_left[i] / cur[task_dn[i]], i, "io"))
+            else:
+                events.append((max(t, cpu_done[i]), i, "done"))
+        events += [(tc, i, "recheck") for i, tc in rechecks.items()
+                   if not busy[i]]
+        events += fpend
+        t_next, i, kind = min(events,
+                              key=lambda e: (e[0], e[1], _PRIO[e[2]]))
+        for j in range(n):
+            if flow_active(j):
+                io_left[j] = max(0.0,
+                                 io_left[j] - cur[task_dn[j]] * (t_next - t))
+        t = t_next
+        if kind in ("kill", "drain", "recover"):
+            fpend.remove((t_next, i, kind))
+            if kind == "kill":
+                kill(i, t)
+                wake(t)
+            elif kind == "drain":
+                f_drain[i] = True
+            else:
+                f_dead[i] = False
+                wake(t)
+            if mitigation is not None:
+                offer_all(t)
+        elif kind == "recheck":
+            del rechecks[i]
+            offer_all(t)
+        elif kind == "io":
+            io_left[i] = 0.0
+            if t + _EPS >= cpu_done[i]:
+                complete(i, t)
+        else:
+            complete(i, t)
+
+    return _stage_result(records, node_finish, start_time)
+
+
+def assert_stage_match(oracle, got):
+    assert got.completion == _approx(oracle.completion)
+    assert got.idle_time == _approx(oracle.idle_time)
+    assert set(got.node_finish) == set(oracle.node_finish)
+    for name, tt in oracle.node_finish.items():
+        assert got.node_finish[name] == _approx(tt)
+    ra = sorted(oracle.records, key=lambda r: (r.task_id, r.node, r.start))
+    rb = sorted(got.records, key=lambda r: (r.task_id, r.node, r.start))
+    assert len(ra) == len(rb)
+    for a, b in zip(ra, rb):
+        assert b.task_id == a.task_id and b.node == a.node
+        assert b.start == _approx(a.start)
+        assert b.end == _approx(a.end)
+        assert b.cpu_work == _approx(a.cpu_work)
+
+
+# --------------------------------------------------------------------------
+# randomized generators
+# --------------------------------------------------------------------------
+
+N_DATANODES = 3
+
+
+def random_cluster(rng, max_nodes=4, constant=False):
+    n = int(rng.integers(2, max_nodes + 1))
+    nodes = []
+    for i in range(n):
+        if constant:
+            prof = [(0.0, float(rng.uniform(0.2, 3.0)))]
+        else:
+            n_seg = int(rng.integers(1, 4))
+            breaks = np.concatenate(
+                [[0.0], np.cumsum(rng.uniform(0.5, 5.0, n_seg - 1))])
+            prof = [(float(tb), float(rng.uniform(0.2, 3.0)))
+                    for tb in breaks]
+        nodes.append(SimNode(f"n{i}", prof, float(rng.uniform(0.0, 0.3))))
+    return nodes
+
+
+def random_policy(rng):
+    placement = (None if rng.random() < 0.5
+                 else DuplicatePlacement("replica", N_DATANODES))
+    if rng.random() < 0.5:
+        return WorkStealing(grain=float(rng.choice([0.25, 0.5, 1.0])),
+                            placement=placement)
+    return SpeculativeCopies(
+        quantile=float(rng.choice([0.5, 0.75])),
+        factor=float(rng.uniform(1.05, 3.0)),
+        min_completed=int(rng.integers(1, 3)),
+        io_cost_per_mb=float(rng.choice([0.0, 0.1])),
+        placement=placement)
+
+
+def random_io_tasks(rng, lo=1, hi=14):
+    n_tasks = int(rng.integers(lo, hi))
+    tasks = []
+    for i in range(n_tasks):
+        if rng.random() < 0.6:
+            io = float(rng.uniform(0.3, 6.0))
+            dn = int(rng.integers(0, N_DATANODES))
+        else:
+            io, dn = 0.0, -1
+        tasks.append(SimTask(float(rng.uniform(0.01, 5.0)), io, dn,
+                             task_id=i))
+    return tasks
+
+
+def random_static_queues(rng, n):
+    queues, next_id = [], 0
+    for _ in range(n):
+        q = []
+        for _ in range(int(rng.integers(0, 3))):
+            io = float(rng.uniform(0.3, 6.0)) if rng.random() < 0.5 else 0.0
+            dn = int(rng.integers(0, N_DATANODES)) if io else -1
+            q.append(SimTask(float(rng.uniform(0.0, 6.0)), io, dn,
+                             task_id=next_id))
+            next_id += 1
+        queues.append(q)
+    return queues
+
+
+def random_uplink(rng):
+    return None if rng.random() < 0.25 else float(rng.uniform(0.5, 4.0))
+
+
+def random_trace(rng, n, t_hi=12.0):
+    """1-3 fault events on distinct nodes (one of which may crash twice
+    after recovering), random retry policy + checkpoint grain: crashes
+    mid-CPU and mid-I/O, recoveries mid-stage, preemption drains."""
+    events = []
+    hit = rng.permutation(n)[:int(rng.integers(1, min(n, 3) + 1))]
+    for nd in hit:
+        at = float(rng.uniform(0.1, t_hi))
+        u = rng.random()
+        if u < 0.3:
+            events.append(NodeCrash(int(nd), at))
+        elif u < 0.7:
+            rec = at + float(rng.uniform(0.5, 6.0))
+            events.append(NodeCrash(int(nd), at, recover_at=rec))
+            if rng.random() < 0.3:
+                events.append(NodeCrash(int(nd),
+                                        rec + float(rng.uniform(0.5, 3.0))))
+        else:
+            events.append(SpotPreemption(
+                int(nd), at, warning=float(rng.choice([0.0, 0.5, 1.5]))))
+    retry = RetryPolicy(max_attempts=int(rng.integers(1, 4)),
+                        relaunch_overhead=float(rng.choice([0.0, 0.2, 0.7])),
+                        backoff=float(rng.choice([1.0, 2.0])))
+    return FaultTrace(tuple(events), retry=retry,
+                      checkpoint_grain=float(rng.choice([0.0, 0.25, 1.0])))
+
+
+# --------------------------------------------------------------------------
+# randomized differential suites (engine vs. oracle at 1e-9)
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_faulted_pull(seed):
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    tasks = random_io_tasks(rng)
+    bw = random_uplink(rng)
+    trace = random_trace(rng, len(nodes))
+    start = float(rng.uniform(0.0, 2.0))
+    oracle = oracle_stage_faults(nodes, [list(tasks)], pull=True,
+                                 faults=trace, uplink_bw=bw,
+                                 start_time=start)
+    got = run_stage_events(nodes, [tasks], pull=True, uplink_bw=bw,
+                           start_time=start, faults=trace)
+    assert_stage_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_faulted_static(seed):
+    """HeMT macrotask queues under random crash/recover/preemption traces:
+    re-queue destinations, recovery re-execution, retry exhaustion and
+    checkpoint flooring all pinned against the rescan oracle."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    queues = random_static_queues(rng, len(nodes))
+    bw = random_uplink(rng)
+    trace = random_trace(rng, len(nodes))
+    oracle = oracle_stage_faults(nodes, [list(q) for q in queues],
+                                 pull=False, faults=trace, uplink_bw=bw)
+    got = run_stage_events(nodes, queues, pull=False, uplink_bw=bw,
+                           faults=trace)
+    assert_stage_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_faulted_mitigated(seed):
+    """Faults composed with speculation / work stealing: victims of kills
+    that had racing copies, mitigation offers around dead and draining
+    nodes, idle rechecks across recoveries."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    pol = random_policy(rng)
+    bw = random_uplink(rng)
+    trace = random_trace(rng, len(nodes))
+    if rng.random() < 0.5:
+        queues, pull = [random_io_tasks(rng, hi=10)], True
+    else:
+        queues, pull = random_static_queues(rng, len(nodes)), False
+    oracle = oracle_stage_faults(nodes, [list(q) for q in queues],
+                                 pull=pull, faults=trace, uplink_bw=bw,
+                                 mitigation=pol)
+    got = run_stage_events(nodes, [list(q) for q in queues], pull=pull,
+                           uplink_bw=bw, mitigation=pol, faults=trace)
+    assert_stage_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_run_job_faulted(seed):
+    """run_job threading a fault trace: fault-free stages ride the cached
+    shifted solves, fault-overlapping stages re-solve on the absolute-time
+    event path — every stage must equal the per-stage oracle run with
+    barriers carried by hand."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, constant=True)
+    n = len(nodes)
+    trace = random_trace(rng, n, t_hi=8.0)
+    specs = []
+    for _ in range(int(rng.integers(1, 4))):
+        pol = random_policy(rng) if rng.random() < 0.4 else None
+        if rng.random() < 0.5:
+            specs.append(StaticSpec(
+                works=tuple(rng.uniform(0.0, 5.0, n)), mitigation=pol,
+                io_mb=float(rng.uniform(0.0, 8.0)),
+                datanode=int(rng.integers(0, N_DATANODES))))
+        else:
+            specs.append(PullSpec(
+                works=tuple(rng.uniform(0.01, 3.0,
+                                        int(rng.integers(1, 10)))),
+                io_mb=float(rng.uniform(0.0, 2.0)),
+                datanode=int(rng.integers(0, N_DATANODES)),
+                mitigation=pol))
+    bw = float(rng.uniform(0.5, 4.0))
+    run_job_cache_clear()
+    sched = run_job(nodes, specs, uplink_bw=bw, faults=trace)
+    t = 0.0
+    for spec, summ in zip(specs, sched.stages):
+        res = oracle_stage_faults(nodes, _spec_tasks(spec),
+                                  pull=isinstance(spec, PullSpec),
+                                  faults=trace, uplink_bw=bw,
+                                  mitigation=spec.mitigation, start_time=t)
+        assert summ.completion == _approx(res.completion)
+        assert summ.idle_time == _approx(res.idle_time)
+        for nd in nodes:
+            assert summ.node_finish[nd.name] == _approx(
+                res.node_finish[nd.name])
+        t = res.completion
+    assert sched.completion == _approx(t)
+
+
+# --------------------------------------------------------------------------
+# crafted scenarios: exact numbers per the documented semantics
+# --------------------------------------------------------------------------
+
+def _records(res):
+    return sorted((r.task_id, r.node, r.start, r.end, r.cpu_work)
+                  for r in res.records)
+
+
+def test_crash_mid_cpu_redistributes_residual():
+    """A permanent crash mid-CPU: with no checkpoint the 3 executed units
+    are lost, so the WHOLE task re-runs on the least-loaded survivor."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    trace = FaultTrace((NodeCrash(0, 3.0),))
+    res = run_static_stage(nodes, [[SimTask(10.0, task_id=0)],
+                                   [SimTask(4.0, task_id=1)]],
+                           faults=trace)
+    assert _records(res) == [(0, "b", 4.0, _approx(14.0), _approx(10.0)),
+                             (1, "b", 0.0, _approx(4.0), _approx(4.0))]
+    assert res.completion == _approx(14.0)
+    assert_stage_match(oracle_stage_faults(
+        nodes, [[SimTask(10.0, task_id=0)], [SimTask(4.0, task_id=1)]],
+        pull=False, faults=trace), res)
+
+
+def test_crash_mid_io_drain_frees_the_flow():
+    """A reader crashing mid-fetch leaves the uplink at the kill instant:
+    the surviving co-reader's flow reprices causally to the full rate, and
+    the re-queued task re-fetches its input from scratch."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    tasks = [SimTask(0.1, 8.0, 0, task_id=0), SimTask(0.1, 8.0, 0, task_id=1)]
+    trace = FaultTrace((NodeCrash(0, 2.0),))
+    res = run_pull_stage(nodes, list(tasks), uplink_bw=2.0, faults=trace)
+    # shared 1 MB/s each until t=2; b alone at 2 MB/s drains 6 MB by t=5;
+    # task 0 re-fetches all 8 MB alone: 5 + 4 = 9
+    assert _records(res) == [(0, "b", 5.0, _approx(9.0), _approx(0.1)),
+                             (1, "b", 0.0, _approx(5.0), _approx(0.1))]
+    assert res.completion == _approx(9.0)
+    assert_stage_match(oracle_stage_faults(
+        nodes, [list(tasks)], pull=True, faults=trace, uplink_bw=2.0), res)
+
+
+def test_speculation_victim_crash_copy_becomes_primary():
+    """The straggler dies while a speculative copy races it: the copy
+    survives as the task's only attempt — no re-queue, no retry charge."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    queues = [[SimTask(10.0, task_id=0), SimTask(1.0, task_id=1)]]
+    pol = SpeculativeCopies(quantile=0.5, factor=2.0, min_completed=1)
+    trace = FaultTrace((NodeCrash(0, 5.0),))
+    res = run_stage_events(nodes, [list(q) for q in queues], pull=True,
+                           mitigation=pol, faults=trace)
+    # b finishes task 1 at t=1 -> threshold 2 -> copy of task 0 launches
+    # on b at t=2 (work 10, done t=12); a dies at 5 -> copy is primary
+    assert _records(res) == [(0, "b", 2.0, _approx(12.0), _approx(10.0)),
+                             (1, "b", 0.0, _approx(1.0), _approx(1.0))]
+    assert res.completion == _approx(12.0)
+    assert_stage_match(oracle_stage_faults(
+        nodes, [list(q) for q in queues], pull=True, faults=trace,
+        mitigation=pol), res)
+
+
+def test_recovery_mid_stage_reexecutes_on_the_victim():
+    """A crash with a scheduled recovery: the residual waits at the front
+    of the victim's own queue and re-executes when the node comes back
+    (with the retry policy's relaunch penalty at the new launch)."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    queues = [[SimTask(2.0, task_id=0)], [SimTask(8.0, task_id=1)]]
+    trace = FaultTrace((NodeCrash(0, 1.0, recover_at=3.0),))
+    res = run_static_stage(nodes, [list(q) for q in queues], faults=trace)
+    # a's executed unit is lost: the full 2-unit task re-runs at recovery
+    assert _records(res) == [(0, "a", 3.0, _approx(5.0), _approx(2.0)),
+                             (1, "b", 0.0, _approx(8.0), _approx(8.0))]
+    assert res.completion == _approx(8.0)
+
+    slow = FaultTrace((NodeCrash(0, 1.0, recover_at=3.0),),
+                      retry=RetryPolicy(relaunch_overhead=0.5))
+    res2 = run_static_stage(nodes, [list(q) for q in queues], faults=slow)
+    rec = [r for r in res2.records if r.task_id == 0][0]
+    assert rec.end == _approx(5.5)          # 3.0 start + 0.5 penalty + 2.0
+
+
+def test_preemption_drain_checkpoints_at_grain_boundary():
+    """A spot preemption with a warning window drains to the kill instant;
+    with a checkpoint grain the executed prefix floors to a grain boundary
+    and survives as a partial record.  Also pins the tie rule: b's own
+    completion at the kill instant is processed after the kill (lower node
+    index first), so the residual lands behind b's just-finished task."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    queues = [[SimTask(10.0, task_id=0)], [SimTask(3.0, task_id=1)]]
+    trace = FaultTrace((SpotPreemption(0, 2.0, warning=1.0),),
+                       checkpoint_grain=2.0)
+    res = run_static_stage(nodes, [list(q) for q in queues], faults=trace)
+    # killed at 3 having executed 3 units -> 2 saved, 8 re-queued to b
+    assert _records(res) == [(0, "a", 0.0, _approx(3.0), _approx(2.0)),
+                             (0, "b", 3.0, _approx(11.0), _approx(8.0)),
+                             (1, "b", 0.0, _approx(3.0), _approx(3.0))]
+    assert res.completion == _approx(11.0)
+    assert_stage_match(oracle_stage_faults(
+        nodes, [list(q) for q in queues], pull=False, faults=trace), res)
+
+
+def test_draining_node_pulls_no_new_work():
+    """During the warning window the node keeps its current attempt but
+    pulls nothing new; after the kill, spot capacity never returns."""
+    nodes = [SimNode.constant("a", 1.0)]
+    tasks = [SimTask(2.0, task_id=0), SimTask(2.0, task_id=1)]
+    trace = FaultTrace((SpotPreemption(0, 1.0, warning=10.0),))
+    res = run_pull_stage(nodes, list(tasks), faults=trace)
+    # task 0 completes at 2 inside the drain window; task 1 is stranded
+    assert _records(res) == [(0, "a", 0.0, _approx(2.0), _approx(2.0))]
+    assert res.completion == _approx(2.0)
+
+
+def test_retries_exhausted_abandons_residual():
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    queues = [[SimTask(10.0, task_id=0)], [SimTask(3.0, task_id=1)]]
+    trace = FaultTrace((NodeCrash(0, 3.0),),
+                       retry=RetryPolicy(max_attempts=1))
+    res = run_static_stage(nodes, [list(q) for q in queues], faults=trace)
+    assert _records(res) == [(1, "b", 0.0, _approx(3.0), _approx(3.0))]
+    assert res.completion == _approx(3.0)
+
+
+def test_relaunch_backoff_compounds_across_retries():
+    """Two crashes of the same node: the k-th re-launch of the surviving
+    task pays relaunch_overhead * backoff**(k-1) at its next launch."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    queues = [[SimTask(4.0, task_id=0)], [SimTask(0.5, task_id=1)]]
+    trace = FaultTrace(
+        (NodeCrash(0, 1.0, recover_at=2.0),
+         NodeCrash(0, 3.5, recover_at=5.0)),
+        retry=RetryPolicy(max_attempts=3, relaunch_overhead=1.0,
+                          backoff=2.0))
+    res = run_static_stage(nodes, [list(q) for q in queues], faults=trace)
+    # kill 1: no checkpoint, the full 4 units re-queue with penalty 1.0
+    # (launch 3, done 7); kill 2 at 3.5 loses the 0.5 executed again and
+    # re-queues all 4 with penalty 2.0: the attempt starts at the t=5
+    # recovery, computes from launch 7, finishes at 11
+    assert _records(res) == [(0, "a", 5.0, _approx(11.0), _approx(4.0)),
+                             (1, "b", 0.0, _approx(0.5), _approx(0.5))]
+    assert res.completion == _approx(11.0)
+    assert_stage_match(oracle_stage_faults(
+        nodes, [list(q) for q in queues], pull=False, faults=trace), res)
+
+
+def test_zero_work_macrotask_on_dead_node_never_waits():
+    """An alive-masked replan parks zero-work macrotasks on dead nodes;
+    waiting a recovery out to run a no-op would serialize the stage on it,
+    so zero-work zero-byte tasks redistribute immediately — real work
+    still waits for its node."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    trace = FaultTrace((NodeCrash(1, 0.0, recover_at=100.0),))
+    res = run_static_stage(nodes, [[SimTask(2.0, task_id=0)],
+                                   [SimTask(0.0, task_id=1)]], faults=trace)
+    assert res.completion == _approx(2.0)
+    assert all(r.node == "a" for r in res.records)
+
+    real = run_static_stage(nodes, [[SimTask(2.0, task_id=0)],
+                                    [SimTask(3.0, task_id=1)]],
+                            faults=trace)
+    assert real.completion == _approx(103.0)
+
+
+def test_trace_validation_and_queries():
+    with pytest.raises(ValueError):
+        NodeCrash(-1, 1.0)
+    with pytest.raises(ValueError):
+        NodeCrash(0, 2.0, recover_at=1.0)
+    with pytest.raises(ValueError):
+        SpotPreemption(0, 1.0, warning=-0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff=0.5)
+    with pytest.raises(ValueError):        # overlapping intervals, one node
+        FaultTrace((NodeCrash(0, 1.0, recover_at=5.0), NodeCrash(0, 3.0)))
+    with pytest.raises(ValueError):        # nothing may follow a preemption
+        FaultTrace((SpotPreemption(0, 1.0), NodeCrash(0, 9.0)))
+
+    tr = FaultTrace((NodeCrash(0, 2.0, recover_at=4.0),
+                     SpotPreemption(1, 3.0, warning=1.0)))
+    assert tr.state_at(0, 1.9) == 0 and tr.state_at(0, 2.0) == DEAD
+    assert tr.state_at(0, 4.0) == 0
+    assert tr.state_at(1, 3.5) == DRAINING and tr.state_at(1, 4.0) == DEAD
+    assert tr.alive_mask(3, 3.5) == [False, False, True]
+    assert tr.recovery_after(0, 3.0) == 4.0
+    assert tr.recovery_after(1, 5.0) is None
+    assert tr.overlaps(0.0, 1.0) is False
+    assert tr.overlaps(0.0, 2.5) and tr.overlaps(5.0, 6.0)  # preempt open
+    assert tr.sub_events(0.0) == [(2.0, 0, "kill"), (3.0, 1, "drain"),
+                                  (4.0, 0, "recover"), (4.0, 1, "kill")]
+    assert tr.sub_events(2.0) == [(3.0, 1, "drain"), (4.0, 0, "recover"),
+                                  (4.0, 1, "kill")]
+    # a same-instant recover/kill pair on one node processes recover first
+    adj = FaultTrace((NodeCrash(0, 1.0, recover_at=3.0), NodeCrash(0, 3.0)))
+    assert adj.sub_events(0.0) == [(1.0, 0, "kill"), (3.0, 0, "recover"),
+                                   (3.0, 0, "kill")]
+
+    shifted = tr.shift(10.0)
+    assert shifted.state_at(0, 12.5) == DEAD
+    kept = tr.restrict([1, 2])
+    assert kept.max_node() == 0            # node 1 renumbered to 0
+    assert kept.state_at(0, 3.5) == DRAINING
+
+    cold = FaultTrace((NodeCrash(2, 1.0, recover_at=6.0, cold_restart=True),
+                       NodeCrash(0, 2.0, recover_at=3.0)))
+    assert cold.cold_restarts() == [(6.0, 2)]
+
+    with pytest.raises(ValueError):        # trace names a node out of range
+        run_stage_events([SimNode.constant("a", 1.0)],
+                         [[SimTask(1.0, task_id=0)]], pull=False,
+                         faults=FaultTrace((NodeCrash(3, 1.0),)))
+
+    assert lost_work(10.0, 7.0) == _approx(3.0)
+    assert lost_work(7.0, 7.0 + 1e-12) == 0.0
+
+
+# --------------------------------------------------------------------------
+# run_job: cache no-poisoning, reskew fold, adaptive composition
+# --------------------------------------------------------------------------
+
+def test_fault_solves_never_poison_the_start_invariant_cache():
+    """Fault windows break start-invariance, so fault-affected stages must
+    bypass both solve cache levels: a fault-free job run right after a
+    faulted one (warm LRU) must reproduce the pure closed-form schedule,
+    and a warm-cache faulted re-run must reproduce itself."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    spec = StaticSpec(works=(4.0, 4.0))
+    trace = FaultTrace((NodeCrash(1, 5.0),),
+                       retry=RetryPolicy(max_attempts=1))
+    run_job_cache_clear()
+    faulted = run_job(nodes, [spec] * 3, faults=trace)
+    # stage 0 [0,4] is untouched; stage 1 loses b's residual at t=5;
+    # stage 2 runs both macrotasks on a (b dead for good, queue shed)
+    assert faulted.stages[0].span == _approx(4.0)
+    assert faulted.stages[1].completion == _approx(8.0)
+    assert faulted.stages[1].work["b"] == _approx(0.0)
+    assert faulted.stages[2].completion == _approx(16.0)
+
+    clean = run_job(nodes, [spec] * 3)     # warm cache: must be untainted
+    assert [s.span for s in clean.stages] == [_approx(4.0)] * 3
+    assert clean.completion == _approx(12.0)
+
+    again = run_job(nodes, [spec] * 3, faults=trace)
+    for a, b in zip(faulted.stages, again.stages):
+        assert b.completion == _approx(a.completion)
+        assert b.node_finish == a.node_finish
+    assert again.completion == _approx(faulted.completion)
+
+
+def test_fault_lost_work_folds_through_reskew_handoff():
+    """Work a fault-affected stage abandoned folds into the next stage's
+    split through ReskewHandoff, proportional to observed survivor
+    throughput; without a handoff the loss is eaten."""
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    trace = FaultTrace((NodeCrash(1, 2.0),),
+                       retry=RetryPolicy(max_attempts=1))
+    rk = ReskewHandoff(cutoff_factor=10.0)  # never cuts on its own
+    run_job_cache_clear()
+    folded = run_job(nodes, [StaticSpec(works=(4.0, 4.0), mitigation=rk),
+                             StaticSpec(works=(4.0, 4.0), mitigation=rk)],
+                     faults=trace)
+    # stage 0: b's 4 units die at t=2 unrecorded -> lost=4 folds onto a
+    # (only observed survivor); stage 1 works (8, 4) all execute on a
+    assert folded.completion == _approx(16.0)
+
+    eaten = run_job(nodes, [StaticSpec(works=(4.0, 4.0)),
+                            StaticSpec(works=(4.0, 4.0))], faults=trace)
+    assert eaten.completion == _approx(12.0)
+
+
+def test_adaptive_replan_masks_dead_nodes_at_the_barrier():
+    """OA-HeMT under faults: a stage planned while a node is dead re-splits
+    the whole total over the survivors (who keep their AR(1) estimates);
+    the dead node gets a zero-work macrotask."""
+    nodes = [SimNode.constant("a", 2.0), SimNode.constant("b", 1.0),
+             SimNode.constant("c", 4.0)]
+    spec = StaticSpec(works=(20.0, 10.0, 40.0))
+    trace = FaultTrace((NodeCrash(2, 11.0, recover_at=1000.0),),
+                       retry=RetryPolicy(max_attempts=1))
+    adaptive = AdaptivePlan()
+    run_job_cache_clear()
+    sched = run_job(nodes, [spec] * 3, adaptive=adaptive, faults=trace)
+    h = adaptive.history
+    # stage 0 [0,10] fault-free, cold estimator keeps the planned split
+    assert not h[0].replanned
+    # stage 1 replans from learned speeds (2,1,4) -> same split; c dies
+    # mid-stage at t=11, its residual is abandoned (1 attempt)
+    assert h[1].replanned and h[1].works == _approx((20.0, 10.0, 40.0))
+    assert sched.stages[1].work["c"] == _approx(0.0)
+    # stage 2 barrier at t=20: c is dead -> masked replan, survivors split
+    # the full 70 units by their kept estimates (2:1), c gets zero
+    assert h[2].works[2] == 0.0
+    assert h[2].works[0] == _approx(140.0 / 3.0)
+    assert h[2].works[1] == _approx(70.0 / 3.0)
+    assert sched.completion == _approx(20.0 + 70.0 / 3.0)
+
+
+def test_cold_restart_forgets_estimate_at_recovery_barrier():
+    """A crash marked cold_restart=True: the first barrier at/after the
+    recovery forgets the node's AR(1) estimate, so the replacement
+    cold-starts at the survivor mean (paper §5.1's L_k^o rule)."""
+    nodes = [SimNode.constant("a", 2.0), SimNode.constant("b", 1.0),
+             SimNode.constant("c", 4.0)]
+    spec = StaticSpec(works=(20.0, 10.0, 40.0))
+    trace = FaultTrace((NodeCrash(2, 3.0, recover_at=5.0,
+                                  cold_restart=True),))
+    adaptive = AdaptivePlan()
+    run_job_cache_clear()
+    run_job(nodes, [spec] * 2, adaptive=adaptive, faults=trace)
+    # stage 0: c killed at 3, re-executes 28 units on recovery [5, 12];
+    # barrier t=12 >= recover_at=5 -> forget c before replanning stage 1
+    h = adaptive.history
+    assert h[1].replanned
+    assert h[1].speeds[0] == _approx(2.0)
+    assert h[1].speeds[1] == _approx(1.0)
+    assert h[1].speeds[2] == _approx(1.5)   # survivor mean of (2, 1)
+
+
+def test_empty_trace_is_a_no_op():
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 0.5)]
+    queues = [[SimTask(3.0, task_id=0)], [SimTask(1.0, task_id=1)]]
+    base = run_static_stage(nodes, [list(q) for q in queues])
+    got = run_static_stage(nodes, [list(q) for q in queues],
+                           faults=FaultTrace())
+    assert got.records == base.records
+    assert got.completion == base.completion
+    run_job_cache_clear()
+    assert run_job(nodes, [StaticSpec(works=(2.0, 1.0))],
+                   faults=FaultTrace()).completion == _approx(2.0)
+
+
+def test_bench_faults_reproduces_degradation_ordering():
+    """Acceptance row: under the same preemption trace, HomT degrades
+    gracefully, stale static HeMT collapses, and OA-HeMT with a re-skew
+    handoff stays within a small gap of the post-failure clairvoyant
+    schedule."""
+    from benchmarks.bench_faults import scenario_completions
+
+    c = scenario_completions()
+    assert c["oa_hemt_faults"] < c["hemt_stale_faults"], c
+    assert c["homt_faults"] < c["hemt_stale_faults"], c
+    # graceful HomT: bounded blow-up over its own fault-free run
+    assert c["homt_faults"] < 2.0 * c["homt_clean"], c
+    # stale static HeMT collapses: worse than double its clean run
+    assert c["hemt_stale_faults"] > 2.0 * c["hemt_clean"], c
+    # OA-HeMT lands within 30% of the post-failure clairvoyant optimum
+    assert c["oa_hemt_faults"] <= 1.3 * c["clairvoyant_faults"], c

@@ -326,3 +326,112 @@ def test_speculative_copies():
     assert speculative_copies(done, 1.5, running) == []
     # at t=3.0 it exceeds the timeout factor -> relaunch
     assert speculative_copies(done, 3.0, running) == [2]
+
+
+# --------------------------------------------------------------------------
+# elastic resize + fault-recovery loop (repro.runtime.elastic / faults)
+# --------------------------------------------------------------------------
+
+def test_elastic_replan_with_no_survivors_raises():
+    p = GrainPlanner(["a", "b"], alpha=0.0)
+    with pytest.raises(RuntimeError, match="no slices left"):
+        replan(p, [], [])
+
+
+def test_elastic_newcomer_cold_starts_at_survivor_mean():
+    """Paper §5.1's L_k^o replacement rule: a slice that joins after a
+    resize starts at the mean of the survivors' AR(1) estimates."""
+    p = GrainPlanner(["a", "b", "c"], alpha=0.0)
+    p.observe_step({"a": {"grains": 4, "elapsed": 1.0},     # 4 grains/s
+                    "b": {"grains": 4, "elapsed": 2.0},     # 2 grains/s
+                    "c": {"grains": 4, "elapsed": 4.0}})    # 1 grain/s
+    replan(p, ["a", "b"], ["d"])                            # c died, d joins
+    assert p.estimator.speed("c") is None                   # forgotten
+    sp = p.estimator.speeds(["a", "b", "d"])
+    assert sp[0] == pytest.approx(4.0)                      # survivors keep
+    assert sp[1] == pytest.approx(2.0)
+    assert sp[2] == pytest.approx(3.0)                      # mean of (4, 2)
+
+
+def test_reshard_restore_requires_a_checkpoint():
+    from repro.runtime.elastic import reshard_restore
+
+    class _Empty:
+        def restore_latest(self, state_like):
+            return None
+
+    class _Full:
+        def restore_latest(self, state_like):
+            return 7, {"w": jnp.ones(2)}, {}
+
+    with pytest.raises(FileNotFoundError, match="no checkpoint"):
+        reshard_restore(_Empty(), {"w": jnp.zeros(2)})
+    step, state = reshard_restore(_Full(), {"w": jnp.zeros(2)})
+    assert step == 7
+    assert float(state["w"].sum()) == pytest.approx(2.0)
+
+
+def test_fleet_monitor_straggler_episode_events():
+    """Straggler events carry the stable slice name and fire once per
+    episode: one "straggler" on entry, one "recovered" on exit, nothing
+    on repeated checks in between."""
+    m = FleetMonitor(["a", "b", "c", "d"], timeout=100.0)
+    for name, rate in zip("abcd", [4.0, 4.2, 3.9, 0.5]):
+        m.heartbeat(Heartbeat(name, 1.0, int(rate * 10), 10.0))
+    _, reports = m.check(1.0)
+    assert [r.name for r in reports] == ["d"]
+    m.check(2.0)                           # same episode: no new event
+    strag = [e for e in m.events if e.kind == "straggler"]
+    assert [(e.slice_name, e.at) for e in strag] == [("d", 1.0)]
+    m.heartbeat(Heartbeat("d", 3.0, 40, 10.0))   # back to 4 grains/s
+    m.check(3.0)
+    rec = [e for e in m.events if e.kind == "recovered"]
+    assert [(e.slice_name, e.detail) for e in rec] == \
+        [("d", "straggler episode ended")]
+    # a second episode re-arms the event
+    m.heartbeat(Heartbeat("d", 4.0, 5, 10.0))
+    m.check(4.0)
+    strag = [e for e in m.events if e.kind == "straggler"]
+    assert [e.at for e in strag] == [1.0, 4.0]
+
+
+def test_trainer_window_detects_crash_and_replans_survivors():
+    """The detection->recovery loop inside one oa-hemt driver window: a
+    fault trace kills a slice mid-window, its heartbeats stop (an
+    alive-masked barrier hands it zero grains), the FleetMonitor declares
+    it dead, and the window's remaining barriers re-schedule over the
+    survivor via elastic.replan — all in one run_window call."""
+    from repro.core.faults import FaultTrace, NodeCrash
+
+    cfg, bundle = _tiny()
+    slices = [SliceSpec("fast", [(0.0, 1.0)], 0.05),
+              SliceSpec("slow", [(0.0, 1.0)], 0.05)]
+    tr = HeMTTrainer(cfg, bundle, slices, grain_batch=2, global_batch=16,
+                     seq_len=16, mode="oa-hemt", grain_cost=1.0)
+    trace = FaultTrace((NodeCrash(1, 6.0),))    # permanent, mid-step-1
+    m = FleetMonitor(["fast", "slow"], timeout=4.0)
+    st = train_state_init(KEY, cfg, bundle)
+    st = tr.run_window(st, 6, faults=trace, monitor=m)
+    assert int(st.step) == 6                    # every barrier executed
+    assert len(tr.reports) == 6
+    assert [s.name for s in tr.slices] == ["fast"]
+    assert m.alive() == ["fast"]
+    dead = [e for e in m.events if e.kind == "dead"]
+    assert [e.slice_name for e in dead] == ["slow"]
+    # each step still processes the whole global batch, in whole grains
+    for rep in tr.reports:
+        assert sum(rep.grain_counts.values()) == tr.n_grains
+        assert np.isfinite(rep.loss)
+    # after the elastic replan the survivor carries the full batch
+    assert tr.reports[-1].grain_counts == {"fast": 8}
+
+
+def test_trainer_per_step_mode_rejects_fault_wiring():
+    from repro.core.faults import FaultTrace, NodeCrash
+
+    cfg, bundle = _tiny()
+    tr = HeMTTrainer(cfg, bundle, [SliceSpec("a", [(0.0, 1.0)], 0.05)],
+                     grain_batch=2, global_batch=4, seq_len=16, mode="hemt")
+    st = train_state_init(KEY, cfg, bundle)
+    with pytest.raises(ValueError, match="windowed scheduling"):
+        tr.run_window(st, 1, faults=FaultTrace((NodeCrash(0, 1.0),)))

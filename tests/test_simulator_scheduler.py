@@ -181,4 +181,9 @@ def test_detect_stragglers():
 
 def test_rebalance_after_loss():
     w = rebalance_after_loss([0.5, 0.3, 0.2], lost=[1])
-    assert w == pytest.approx([0.5 / 0.7, 0.2 / 0.7])
+    # weights map back to the surviving original indices
+    assert sorted(w) == [0, 2]
+    assert w[0] == pytest.approx(0.5 / 0.7)
+    assert w[2] == pytest.approx(0.2 / 0.7)
+    with pytest.raises(ValueError):
+        rebalance_after_loss([0.5, 0.5], lost=[0, 1])
