@@ -1,0 +1,153 @@
+"""Resident cluster loop: splice-in recovery vs restart-per-event, and
+per-job SLO attainment across the three scheduling regimes
+(``repro.core.resident``; paper §5's barrier re-planning made resident,
+§8's revocable-capacity setting).
+
+Two scenarios:
+
+**Recovery** — two equal-priority jobs share a two-node cluster (one node
+each under the weighted fair share); the second job's node crashes
+mid-stage and recovers a second later, with a checkpoint grain of one
+work unit.  Under ``recovery="splice"`` the calendar folds the lost tail
+forward — checkpointed work survives, the survivor job never re-plans —
+while the ``"restart"`` baseline re-materializes every open stage from
+scratch at *each* capacity event (the crash and the recovery), so both
+jobs pay twice.  ``splice_makespan < restart_makespan`` is the tentpole
+claim, pinned by tests/test_resident.py.
+
+**SLO** — three deadline-carrying jobs arrive one after another on an
+idle heterogeneous cluster (speeds 2:1:1) and each runs the same total
+work through one of three regimes:
+
+* **oa_hemt**: even static splits plus the online-adaptive loop — stage
+  one pays the cold-start even split, then AR(1) estimates re-skew every
+  later barrier toward the 2x node.
+* **homt**: fine microtasks through the shared pull queue — the split is
+  implicitly speed-proportional, but every microtask pays the dispatch
+  overhead tax.
+* **hemt_stale**: the even split pinned via ``proportions`` and never
+  re-planned — every stage waits on the slow nodes' oversized shares.
+
+The jobs' deadlines are staggered (tight, medium, loose) so attainment
+separates the regimes: OA-HeMT meets all three, HomT only the looser
+two, stale HeMT only the loosest — the paper-predicted
+``slo_oa_hemt >= slo_homt >= slo_stale`` ordering (strict at the ends)
+returned by ``scenario_completions`` and pinned by the tier-1 suite; the
+timed rows land in the ``resident`` section of BENCH_sim.json and are
+gated by ``run.py --check``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import BenchRow, timed
+from repro.core.engine import AdaptivePlan, PullSpec, StaticSpec
+from repro.core.faults import FaultTrace, NodeCrash
+from repro.core.resident import ResidentCalendar, ResidentJob
+from repro.core.simulator import SimNode
+
+# --- SLO scenario ---------------------------------------------------------
+SPEEDS = (2.0, 1.0, 1.0)         # heterogeneous resident cluster
+OVERHEAD = 0.05
+STAGES = 3
+STAGE_WORK = 8.0
+N_MICRO = 16                     # HomT microtask count per stage
+ARRIVALS = (0.0, 12.0, 24.0)     # sequential: each job sees the idle cluster
+MARGINS = (7.0, 7.8, 8.6)        # deadline = arrival + margin (tight..loose)
+
+# --- recovery scenario ----------------------------------------------------
+REC_WORK = 4.0                   # per stage, per single-node job
+REC_STAGES = 2
+REC_TRACE = FaultTrace((NodeCrash(1, 2.0, recover_at=3.0),),
+                       checkpoint_grain=1.0)
+
+
+def _nodes() -> List[SimNode]:
+    return [SimNode.constant(f"n{i}", s, OVERHEAD)
+            for i, s in enumerate(SPEEDS)]
+
+
+def _slo_jobs(regime: str) -> List[ResidentJob]:
+    even = tuple(STAGE_WORK / len(SPEEDS) for _ in SPEEDS)
+    jobs = []
+    for k, (arr, margin) in enumerate(zip(ARRIVALS, MARGINS)):
+        if regime == "homt":
+            stages: tuple = (PullSpec(n_tasks=N_MICRO,
+                                      task_work=STAGE_WORK / N_MICRO),
+                             ) * STAGES
+            adaptive = None
+            proportions = None
+        else:
+            stages = (StaticSpec(works=even),) * STAGES
+            adaptive = AdaptivePlan() if regime == "oa_hemt" else None
+            # the stale regime pins the even split for the calendar's
+            # whole life — heterogeneity is never learned
+            proportions = (None if regime == "oa_hemt"
+                           else {f"n{i}": 1.0 for i in range(len(SPEEDS))})
+        jobs.append(ResidentJob(f"j{k}", stages=stages, arrival=arr,
+                                deadline=arr + margin, adaptive=adaptive,
+                                proportions=proportions))
+    return jobs
+
+
+def _slo_result(regime: str):
+    return ResidentCalendar(_nodes()).run(_slo_jobs(regime))
+
+
+def _recovery_jobs() -> List[ResidentJob]:
+    spec = StaticSpec(works=(REC_WORK,))
+    return [ResidentJob(name, stages=(spec,) * REC_STAGES)
+            for name in ("p", "q")]
+
+
+def _recovery_result(recovery: str):
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    return ResidentCalendar(nodes, faults=REC_TRACE,
+                            recovery=recovery).run(_recovery_jobs())
+
+
+def scenario_completions() -> Dict[str, float]:
+    """Makespans/attainments per recovery mode and scheduling regime."""
+    out = {}
+    out["splice_makespan"] = _recovery_result("splice").makespan
+    out["restart_makespan"] = _recovery_result("restart").makespan
+    out["slo_oa_hemt"] = _slo_result("oa_hemt").attainment()
+    out["slo_homt"] = _slo_result("homt").attainment()
+    out["slo_stale"] = _slo_result("hemt_stale").attainment()
+    return out
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    comps: Dict[str, float] = {}
+    for mode in ("splice", "restart"):
+        res, us = timed(_recovery_result, mode, repeat=5)
+        comps[f"{mode}_makespan"] = res.makespan
+        out.append(BenchRow(
+            f"resident/recovery_{mode}", us,
+            f"makespan={res.makespan:.3f};jobs=2;stages={REC_STAGES}"))
+    for regime in ("oa_hemt", "homt", "hemt_stale"):
+        res, us = timed(_slo_result, regime, repeat=5)
+        comps[f"slo_{regime.replace('hemt_stale', 'stale')}"] = \
+            res.attainment()
+        out.append(BenchRow(
+            f"resident/slo_{regime}", us,
+            f"attainment={res.attainment():.3f};"
+            f"makespan={res.makespan:.3f};jobs={len(ARRIVALS)}"))
+    out.append(BenchRow(
+        "resident/orderings", 0.0,
+        f"splice_beats_restart="
+        f"{comps['splice_makespan'] < comps['restart_makespan']};"
+        f"slo_ordering="
+        f"{comps['slo_oa_hemt'] >= comps['slo_homt'] >= comps['slo_stale']};"
+        f"slo_gap={comps['slo_oa_hemt'] - comps['slo_stale']:.3f}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,7 @@ at 1k/10k/100k tasks (benchmarks.bench_sim_engine) and the kernel rows
 (benchmarks.bench_kernels) — so successive PRs can diff BENCH_sim.json.
 
 ``--check [PATH]`` re-runs only the gated sections — the sim_engine,
-speculation_io, and faults rows — and exits non-zero if any timed row
+speculation_io, faults, and resident rows — and exits non-zero if any timed row
 regressed by more than the threshold against the committed baseline (or
 vanished from the fresh run) — the ROADMAP CI gate.  The
 threshold defaults to 2x and can be overridden per environment —
@@ -41,6 +41,7 @@ MODULES = [
     "benchmarks.bench_speculation",
     "benchmarks.bench_speculation_io",
     "benchmarks.bench_faults",
+    "benchmarks.bench_resident",
     "benchmarks.bench_oa_hemt",
     "benchmarks.bench_sim_engine",
     "benchmarks.bench_kernels",
@@ -51,6 +52,7 @@ JSON_SECTIONS = {
     "benchmarks.bench_speculation": "speculation",
     "benchmarks.bench_speculation_io": "speculation_io",
     "benchmarks.bench_faults": "faults",
+    "benchmarks.bench_resident": "resident",
     "benchmarks.bench_oa_hemt": "oa_hemt",
     "benchmarks.bench_sim_engine": "sim",
     "benchmarks.bench_kernels": "kernels",
@@ -61,6 +63,7 @@ GATED_SECTIONS = {
     "sim": "benchmarks.bench_sim_engine",
     "speculation_io": "benchmarks.bench_speculation_io",
     "faults": "benchmarks.bench_faults",
+    "resident": "benchmarks.bench_resident",
 }
 
 DEFAULT_THRESHOLD = 2.0
@@ -121,7 +124,8 @@ def compare_rows(baseline_rows, fresh_rows,
 def run_check(baseline_path: str, fresh_rows=None,
               threshold: "float | None" = None) -> int:
     """The ``--check`` CI gate: fresh rows of every gated section
-    (``GATED_SECTIONS``: sim_engine + speculation_io + faults) vs. the
+    (``GATED_SECTIONS``: sim_engine + speculation_io + faults +
+    resident) vs. the
     committed
     baseline.  ``fresh_rows`` can be injected for tests — either a dict
     ``{section: [row dicts]}`` (only the given sections are compared) or
@@ -180,7 +184,8 @@ def main() -> None:
     parser.add_argument("--check", nargs="?", const="BENCH_sim.json",
                         default=None, metavar="PATH",
                         help="re-run the gated rows (sim_engine + "
-                             "speculation_io + faults) and exit non-zero on "
+                             "speculation_io + faults + resident) and exit "
+                             "non-zero on "
                              "us_per_call regressions beyond the "
                              "threshold vs the given baseline JSON "
                              "(default: BENCH_sim.json)")

@@ -30,8 +30,9 @@ for differential tests:
    positive per-pull period
    pull, heterogeneous tasks (or zero    ``closed-pull-hetero`` O(T log n)
    period), no eff. I/O                                         tight merge
-   pull, equal ``io_mb`` > 0, single     ``closed-pull-io-sym`` O(T) numpy
-   datanode, network-governed rounds
+   pull, equal ``io_mb`` > 0, striped    ``closed-pull-io-sym`` O(T) numpy
+   round-robin over d | n datanodes,
+   network-governed rounds
    anything else (flow-shared I/O)       ``event``              O(T log n)
    ====================================  =====================  ==============
 
@@ -46,11 +47,15 @@ for differential tests:
      k to the node owning the k-th smallest end event, so a single
      ``heapreplace`` pass over the n per-node grid heads reproduces the
      event calendar exactly with none of its per-event bookkeeping;
-   * ``closed-pull-io-sym``: every task reads the same ``io_mb`` from one
-     datanode and CPU never governs (``overhead + work/speed <= round I/O
-     time`` for every assignment), so the flow-sharing schedule is
-     piecewise linear: rounds of ``min(n, tasks left)`` co-readers that all
-     drain simultaneously after ``io_mb / (uplink_bw / readers)``.
+   * ``closed-pull-io-sym``: every task reads the same ``io_mb``, task k
+     from datanode ``dns[k % d]`` (round-robin stripe over d distinct
+     datanodes with ``d | n``; d = 1 is the single-datanode case), and CPU
+     never governs (``overhead + work/speed <= round I/O time`` for every
+     assignment), so the flow-sharing schedule is piecewise linear: in a
+     full round each datanode serves exactly ``n / d`` co-readers and all
+     n drain simultaneously after ``io_mb / (uplink_bw / (n/d))``; the
+     tail round's datanode groups (``c_j`` readers each) drain
+     independently after ``io_mb / (uplink_bw / c_j)``.
 
    "No effective I/O" means ``uplink_bw`` is None/0 (infinite rate — I/O can
    never delay a completion) or no task has ``datanode >= 0`` with positive
@@ -728,37 +733,68 @@ def _io_active(tasks, uplink_bw: Optional[float]) -> bool:
 
 
 def _io_sym_spans_ok(oh: np.ndarray, sp: np.ndarray, work: np.ndarray,
-                     io_mb: float, uplink_bw: float, n: int) -> bool:
+                     io_mb: float, uplink_bw: float, n: int,
+                     d: int = 1) -> bool:
     """Network-governed check for the symmetric co-reader closed form: task
     k lands on node ``k % n`` in round ``k // n``; its CPU span must fit
     inside that round's shared-drain time so every round stays a
-    simultaneous all-reader drain."""
+    simultaneous drain.  ``d`` is the datanode stripe width (``d | n``):
+    a full round puts ``n / d`` readers on each datanode; the tail round's
+    datanode group j has ``c_j = |{i < q : i % d == j}|`` readers draining
+    independently."""
     n_tasks = len(work)
     full_rounds, q = divmod(n_tasks, n)
     idx = np.arange(n_tasks) % n
     spans = oh[idx] + work / sp[idx]
-    durations = np.full(n_tasks, io_mb / (uplink_bw / n))
+    durations = np.full(n_tasks, io_mb / (uplink_bw / (n // d)))
     if q:
-        durations[full_rounds * n:] = io_mb / (uplink_bw / q)
+        cj = np.bincount(np.arange(q) % d, minlength=d)
+        durations[full_rounds * n:] = \
+            io_mb / (uplink_bw / cj[np.arange(q) % d])
     return bool((spans <= durations).all())
+
+
+def _stripe_width(tasks: Sequence[SimTask], n: int) -> int:
+    """Datanode stripe width d >= 1 of a symmetric pull queue: every task
+    reads the same positive ``io_mb``, task k from ``dns[k % d]`` where
+    ``dns`` is d distinct datanodes and ``d | n`` (so every full round
+    loads each datanode with exactly ``n / d`` readers).  0 if the queue
+    has no such structure (different io_mb, aperiodic datanodes, d not
+    dividing n)."""
+    d0, m = tasks[0].datanode, tasks[0].io_mb
+    if d0 < 0 or m <= _EPS:
+        return 0
+    dns = [d0]
+    for t in tasks[1:]:
+        if t.datanode == d0:
+            break
+        dns.append(t.datanode)
+    d = len(dns)
+    if d > n or n % d or len(set(dns)) != d or any(x < 0 for x in dns):
+        return 0
+    for k, t in enumerate(tasks):
+        if t.datanode != dns[k % d] or t.io_mb != m:
+            return 0
+    return d
 
 
 def _io_symmetric(nodes: Sequence[SimNode], speeds: Sequence[float],
                   tasks: Sequence[SimTask], work: np.ndarray,
-                  uplink_bw: Optional[float]) -> bool:
-    """True if the stage qualifies for ``closed-pull-io-sym``: every task
-    reads the same positive ``io_mb`` from the same single datanode and CPU
-    never governs a completion (see :func:`_io_sym_spans_ok`)."""
+                  uplink_bw: Optional[float]) -> int:
+    """Stripe width d >= 1 if the stage qualifies for
+    ``closed-pull-io-sym`` (round-robin symmetric co-readers, CPU never
+    governing a completion — see :func:`_stripe_width` and
+    :func:`_io_sym_spans_ok`), else 0."""
     if not uplink_bw:
-        return False
-    d0, m = tasks[0].datanode, tasks[0].io_mb
-    if d0 < 0 or m <= _EPS:
-        return False
-    if any(t.datanode != d0 or t.io_mb != m for t in tasks):
-        return False
+        return 0
+    d = _stripe_width(tasks, len(nodes))
+    if not d:
+        return 0
     oh = np.asarray([nd.task_overhead for nd in nodes])
-    return _io_sym_spans_ok(oh, np.asarray(speeds), work, m, uplink_bw,
-                            len(nodes))
+    if _io_sym_spans_ok(oh, np.asarray(speeds), work, tasks[0].io_mb,
+                        uplink_bw, len(nodes), d):
+        return d
+    return 0
 
 
 def _plan(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
@@ -1067,25 +1103,30 @@ def _closed_form_pull_hetero(nodes: Sequence[SimNode], speeds: Sequence[float],
 
 
 def _io_sym_schedule(n: int, n_tasks: int, io_mb: float, uplink_bw: float,
-                     start_time: float) -> Tuple[np.ndarray, np.ndarray,
-                                                 List[float], List[int]]:
+                     start_time: float, d: int = 1,
+                     ) -> Tuple[np.ndarray, np.ndarray,
+                                List[float], List[int]]:
     """Round times for ``closed-pull-io-sym``: task k runs on node ``k % n``
-    in round ``k // n``; each round's co-readers all drain simultaneously
-    after ``io_mb / (uplink_bw / readers)``.  Returns per-task (starts,
-    ends) plus per-node (last finish, task count)."""
+    in round ``k // n`` reading datanode ``k % d`` of the stripe (``d | n``,
+    so each full round's datanode groups hold ``n / d`` co-readers each and
+    all drain simultaneously after ``io_mb / (uplink_bw / (n/d))``; the
+    tail round's group j, ``c_j`` readers, drains independently after
+    ``io_mb / (uplink_bw / c_j)``).  Returns per-task (starts, ends) plus
+    per-node (last finish, task count)."""
     full_rounds, q = divmod(n_tasks, n)
-    full = io_mb / (uplink_bw / n)
+    full = io_mb / (uplink_bw / (n // d))
     ks = np.arange(n_tasks)
     starts = start_time + (ks // n) * full
     ends = starts + full
+    tail_end = [start_time + full_rounds * full
+                + (io_mb / (uplink_bw / int(c)) if c else 0.0)
+                for c in np.bincount(np.arange(q) % d, minlength=d)]
     if q:
-        ends[full_rounds * n:] = (start_time + full_rounds * full
-                                  + io_mb / (uplink_bw / q))
+        ends[full_rounds * n:] = [tail_end[i % d] for i in range(q)]
     node_end, counts = [], []
     for i in range(n):
         if q and i < q:
-            node_end.append(start_time + full_rounds * full
-                            + io_mb / (uplink_bw / q))
+            node_end.append(tail_end[i % d])
             counts.append(full_rounds + 1)
         elif full_rounds:
             node_end.append(start_time + full_rounds * full)
@@ -1101,7 +1142,8 @@ def _closed_form_pull_io_sym(nodes: Sequence[SimNode],
                              start_time: float) -> StageResult:
     n = len(nodes)
     starts, ends, node_end, _ = _io_sym_schedule(
-        n, len(tasks), tasks[0].io_mb, uplink_bw, start_time)
+        n, len(tasks), tasks[0].io_mb, uplink_bw, start_time,
+        _stripe_width(tasks, n))
     names = [nd.name for nd in nodes]
     starts_l, ends_l = starts.tolist(), ends.tolist()
     records = [TaskRecord(t.task_id, names[k % n], starts_l[k], ends_l[k],
@@ -1239,10 +1281,27 @@ class StageSummary:
         return self.completion - self.start
 
 
+class JobContinuation(NamedTuple):
+    """Splice point for a resumed :func:`run_job`: skip stages before
+    ``next_stage`` and run the rest starting at absolute ``clock``, with an
+    optional re-skew ``carry`` — ``(residual work, per-node throughputs)``
+    exactly as a ReskewHandoff barrier produces — folded into the first
+    resumed stage.  This is how a resident scheduler
+    (:mod:`repro.core.resident`) hands a job's unaffected tail back to the
+    closed-form solver after the last fault/resize has been spliced in."""
+    next_stage: int
+    clock: float
+    carry: Optional[Tuple[float, Tuple[float, ...]]] = None
+
+
 @dataclass
 class JobSchedule:
     completion: float
     stages: List[StageSummary]
+    # the continuation this schedule was resumed from (None: ran from
+    # stage 0) — stages[k] is then the (continuation.next_stage + k)-th
+    # program stage
+    continuation: Optional[JobContinuation] = None
 
     @property
     def makespan(self) -> float:
@@ -1610,7 +1669,8 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
             uplink_bw: Optional[float] = None,
             start_time: float = 0.0,
             adaptive: Optional[AdaptivePlan] = None,
-            faults: Optional[FaultTrace] = None) -> JobSchedule:
+            faults: Optional[FaultTrace] = None,
+            resume: Optional[JobContinuation] = None) -> JobSchedule:
     """Run a whole multi-stage job: each stage starts at the previous
     stage's completion (program barrier).
 
@@ -1662,6 +1722,17 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
     crash marked ``cold_restart=True`` forgets the node's estimate at its
     recovery barrier so the replacement cold-starts at the survivor mean
     (paper §5.1).
+
+    ``resume`` (a :class:`JobContinuation`) splices into a partially-run
+    job: stages before ``resume.next_stage`` are skipped, the first
+    resumed stage starts at ``resume.clock`` (overriding ``start_time``),
+    and ``resume.carry`` — a ``(residual, throughputs)`` pair from an
+    earlier re-skew barrier — folds into it before any adaptive re-plan,
+    exactly as an in-run carry would.  Everything else (solve caching,
+    adaptivity, faults on the absolute clock) behaves as if the earlier
+    stages had run in this call; the returned schedule records the
+    continuation so callers can align ``stages[k]`` with program stage
+    ``resume.next_stage + k``.
     """
     speeds = _constant_speeds(nodes)
     names = [nd.name for nd in nodes]
@@ -1677,6 +1748,15 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
     sig = _cluster_signature(nodes) if speeds is not None else None
     stage_list = list(stages)
     carry: Optional[Tuple[float, List[float]]] = None   # (residual, vhat)
+    if resume is not None:
+        if not 0 <= resume.next_stage <= len(stage_list):
+            raise ValueError(
+                f"resume.next_stage {resume.next_stage} outside the "
+                f"{len(stage_list)}-stage program")
+        stage_list = stage_list[resume.next_stage:]
+        t = resume.clock
+        if resume.carry is not None and resume.carry[0] > 0.0:
+            carry = (resume.carry[0], list(resume.carry[1]))
     folded_alive: List = []   # keeps folded temporaries alive: by_id keys
     # are id()s, which CPython reuses once an object is collected
     if faults is not None and not faults.events:
@@ -1759,7 +1839,7 @@ def run_job(nodes: Sequence[SimNode], stages: Sequence,
             adaptive.observe(names, summ)
         summaries.append(summ)
         t = summ.completion
-    return JobSchedule(t, summaries)
+    return JobSchedule(t, summaries, continuation=resume)
 
 
 def _spec_n_tasks(spec) -> int:

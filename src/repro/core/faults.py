@@ -109,8 +109,11 @@ ALIVE, DRAINING, DEAD = 0, 1, 2
 
 # ordering of same-instant fault sub-events on one node: a recovery ending
 # one interval precedes the kill starting the next; a drain warning (which
-# only exists with warning > 0) can never tie with its own kill
-_RANK = {"recover": 0, "drain": 1, "kill": 2}
+# only exists with warning > 0) can never tie with its own kill.  Public:
+# the resident calendar (repro.core.resident) extends this ranking with
+# resize (3) and arrival (4) events for its all-externals-first ordering.
+SUB_EVENT_RANK = {"recover": 0, "drain": 1, "kill": 2}
+_RANK = SUB_EVENT_RANK   # backwards-compatible alias
 
 
 @dataclass(frozen=True)

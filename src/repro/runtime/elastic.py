@@ -24,12 +24,31 @@ from repro.core.planner import GrainPlanner
 Pytree = Any
 
 
+class FleetExhaustedError(RuntimeError):
+    """Every slice died and no newcomers arrived: the fleet cannot run
+    another step.  Carries the last-known AR(1) speed ``estimates``
+    (slice name -> estimated speed, directly-observed slices only) so a
+    recovery loop can checkpoint them and halt gracefully — or seed a
+    replacement fleet — instead of crashing with a bare error.
+
+    Subclasses :class:`RuntimeError` with the historical message, so
+    pre-existing ``except RuntimeError`` / message-matching callers keep
+    working."""
+
+    def __init__(self, estimates: Dict[str, float]):
+        super().__init__("no slices left after resize")
+        self.estimates = dict(estimates)
+
+
 def replan(planner: GrainPlanner, survivors: Sequence[str],
            newcomers: Sequence[str] = ()) -> List[str]:
-    """Apply a fleet change to the planner; returns the new slice list."""
+    """Apply a fleet change to the planner; returns the new slice list.
+
+    Raises :class:`FleetExhaustedError` (carrying the planner's last-known
+    speed estimates) when survivors and newcomers are both empty."""
     new_slices = list(survivors) + list(newcomers)
     if not new_slices:
-        raise RuntimeError("no slices left after resize")
+        raise FleetExhaustedError(planner.estimator.known())
     planner.resize(new_slices)
     return new_slices
 

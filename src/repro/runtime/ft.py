@@ -33,6 +33,7 @@ class Heartbeat:
 @dataclass
 class FleetEvent:
     kind: str                    # "dead" | "straggler" | "recovered"
+    #                              | "exhausted" (whole-fleet terminal)
     slice_name: str
     at: float
     detail: str = ""
@@ -60,6 +61,7 @@ class FleetMonitor:
         self.events: List[FleetEvent] = []
         self._dead: set = set()
         self._straggling: set = set()   # open straggler episodes, by name
+        self.exhausted = False          # set by mark_exhausted()
 
     # ------------------------------------------------------------------
     def heartbeat(self, hb: Heartbeat) -> None:
@@ -123,6 +125,20 @@ class FleetMonitor:
         return [key for key, st in running_starts.items()
                 if pol.should_speculate(done_durations, now - st,
                                         io.get(key, 0.0))]
+
+    def mark_exhausted(self, now: float,
+                       estimates: Optional[Dict[str, float]] = None) -> None:
+        """Record the whole-fleet terminal event: every slice is gone and
+        recovery gave up (:class:`~repro.runtime.elastic.
+        FleetExhaustedError`).  ``estimates`` — the error's last-known
+        speeds — are logged in the event detail so the halt is
+        checkpointable from the event stream alone."""
+        self.exhausted = True
+        detail = ""
+        if estimates:
+            detail = "last estimates: " + ", ".join(
+                f"{n}={v:.3g}" for n, v in sorted(estimates.items()))
+        self.events.append(FleetEvent("exhausted", "*", now, detail))
 
     def alive(self) -> List[str]:
         return [n for n in self.last_seen if n not in self._dead]

@@ -96,6 +96,9 @@ class HeMTTrainer:
         self.reports: List[StepReport] = []
         self.grain_dispatches = 0   # jitted accumulate calls (1 per step)
         self._clock = 0.0           # virtual fleet clock (seconds)
+        # set by run_window when the whole fleet is lost and recovery gives
+        # up: the FleetExhaustedError's last-known speed estimates
+        self.exhausted: Optional[Dict[str, float]] = None
 
     # ------------------------------------------------------------------
     def _sim_nodes(self) -> List[SimNode]:
@@ -202,19 +205,28 @@ class HeMTTrainer:
 
         ``faults`` (a :class:`~repro.core.faults.FaultTrace` on the fleet
         clock) injects crashes / spot preemptions into the window's
-        virtual schedule — the driver shifts it to each segment's local
-        clock before handing it to ``run_job``.  The trace is a *timing*
-        model: every grain's gradient still accumulates (the math stays
+        virtual schedule — the driver shifts it to the window's local
+        clock and hands the whole window to ONE
+        :class:`~repro.core.resident.ResidentCalendar` pass: recoveries
+        *splice into* the adaptive schedule (survivors keep their AR(1)
+        state, checkpointed prefixes count, residuals requeue under the
+        trace's retry policy) instead of re-entering ``run_job`` from
+        scratch per event.  The trace is a *timing* model: every grain's
+        gradient still accumulates (the math stays
         synchronous-equivalent), so use traces whose retry budget covers
         the window.  ``monitor`` (a :class:`~repro.runtime.ft.
-        FleetMonitor`) closes the detection->recovery loop inside the
-        window: every barrier feeds it per-slice heartbeats (slices that
-        executed work) and runs ``monitor.check``; a dead declaration
-        triggers :func:`repro.runtime.elastic.replan` — survivors keep
-        their AR(1) estimates — drops the dead slices from the fleet, and
-        re-schedules the window's remaining barriers over the survivors.
-        Both are honored in ``oa-hemt`` mode only (the per-step fallback
-        would silently ignore them, so passing them there raises).
+        FleetMonitor`) observes the detection loop: every barrier feeds
+        it per-slice heartbeats (slices the barrier planned work for)
+        and runs ``monitor.check``; after the window every dead
+        declaration is applied at once — :func:`repro.runtime.elastic.
+        replan` keeps the survivors' AR(1) estimates and drops the dead
+        slices from the fleet.  If *no* slice survives, the
+        :class:`~repro.runtime.elastic.FleetExhaustedError` is absorbed
+        gracefully: the monitor logs the terminal event, the last-known
+        speed estimates land in ``self.exhausted``, and the trained
+        state so far is returned instead of raising.  Both keywords are
+        honored in ``oa-hemt`` mode only (the per-step fallback would
+        silently ignore them, so passing them there raises).
         """
         if self.mode != "oa-hemt":
             if faults is not None or monitor is not None:
@@ -226,58 +238,68 @@ class HeMTTrainer:
             return state
         if n_steps <= 0:
             return state
+        from repro.core.faults import RetryPolicy
+        from repro.core.resident import ResidentCalendar, ResidentJob
         from repro.runtime import elastic
         from repro.runtime.ft import Heartbeat
-        steps_left = n_steps
-        while steps_left > 0:
-            nodes = self._sim_nodes()
-            names = [s.name for s in self.slices]
-            plan0 = self.planner.plan(self.n_grains)
-            spec = StaticSpec(works=tuple(g * self.grain_cost
-                                          for g in plan0.grains))
-            adaptive = AdaptivePlan(estimator=self.planner.estimator,
-                                    quantum=self.grain_cost,
-                                    min_units=self.planner.min_grains)
-            trace = faults.shift(-self._clock) if faults is not None else None
-            sched = run_job(nodes, [spec] * steps_left, adaptive=adaptive,
-                            faults=trace)
-            clock0 = self._clock
-            newly_dead: List[str] = []
-            ran = 0
-            for s in range(steps_left):
-                summ = sched.stages[s]
-                works = adaptive.history[s].works
-                counts = {nm: int(round(w / self.grain_cost))
-                          for nm, w in zip(names, works)}
-                elapsed = {nm: summ.node_finish[nm] - summ.start
-                           for nm in names}
-                step = int(state.step)
-                state, metrics = self._execute_math(state, counts)
-                rep = StepReport(step, self.mode, counts, elapsed, summ.span,
-                                 summ.idle_time, float(metrics["loss"]), 0)
-                self.reports.append(rep)
-                ran += 1
-                self._clock = clock0 + summ.completion
+        nodes = self._sim_nodes()
+        plan0 = self.planner.plan(self.n_grains)
+        spec = StaticSpec(works=tuple(g * self.grain_cost
+                                      for g in plan0.grains))
+        adaptive = AdaptivePlan(estimator=self.planner.estimator,
+                                quantum=self.grain_cost,
+                                min_units=self.planner.min_grains)
+        trace = faults.shift(-self._clock) if faults is not None else None
+        job = ResidentJob(
+            "window", stages=(spec,) * n_steps,
+            retry=trace.retry if trace is not None else RetryPolicy(),
+            adaptive=adaptive,
+            # the windowed driver's historical contract: abandoned work is
+            # *eaten* (the step's gradients all accumulate anyway), never
+            # folded into the next barrier's quantum budget
+            fold_lost=False)
+        result = ResidentCalendar(nodes, faults=trace).run([job])
+        outcome = result.outcomes["window"]
+        clock0 = self._clock
+        dead_all: List[str] = []
+        for s, summ in enumerate(outcome.stages):
+            counts = {nm: int(round(w / self.grain_cost))
+                      for nm, w in outcome.planned[s].items()}
+            elapsed = {nm: summ.node_finish[nm] - summ.start
+                       for nm in counts}
+            step = int(state.step)
+            state, metrics = self._execute_math(state, counts)
+            rep = StepReport(step, self.mode, counts, elapsed, summ.span,
+                             summ.idle_time, float(metrics["loss"]), 0)
+            self.reports.append(rep)
+            self._clock = clock0 + summ.completion
+            if monitor is not None:
+                for nm in counts:
+                    if counts[nm] > 0 and elapsed[nm] > 0.0:
+                        monitor.heartbeat(Heartbeat(
+                            nm, self._clock, counts[nm], elapsed[nm]))
+                newly_dead, _ = monitor.check(self._clock)
+                dead_all.extend(newly_dead)
+        gone = set(dead_all)
+        if outcome.status == "stranded":
+            # the calendar drained with the window unfinished: whatever the
+            # monitor saw, only the calendar's usable nodes survive
+            gone |= {sl.name for sl in self.slices
+                     if sl.name not in set(result.alive)}
+        if gone:
+            # apply the whole window's roster change at once: survivors
+            # keep their AR(1) estimates (paper §5.1)
+            self.slices = [sl for sl in self.slices if sl.name not in gone]
+            try:
+                elastic.replan(self.planner,
+                               [sl.name for sl in self.slices])
+            except elastic.FleetExhaustedError as e:
+                # graceful degradation instead of a crash: log the
+                # terminal event, keep the last-known estimates, and hand
+                # back the state trained so far
                 if monitor is not None:
-                    for nm in names:
-                        if counts.get(nm, 0) > 0 and elapsed[nm] > 0.0:
-                            monitor.heartbeat(Heartbeat(
-                                nm, self._clock, counts[nm], elapsed[nm]))
-                    newly_dead, _ = monitor.check(self._clock)
-                    if newly_dead:
-                        break
-            steps_left -= ran
-            if newly_dead:
-                # detection -> recovery inside the window: re-plan over the
-                # survivors (AR(1) estimates kept, paper §5.1) and
-                # re-schedule the remaining barriers without the dead slices
-                gone = set(newly_dead)
-                keep = [i for i, sl in enumerate(self.slices)
-                        if sl.name not in gone]
-                self.slices = [self.slices[i] for i in keep]
-                if faults is not None:
-                    faults = faults.restrict(keep)
-                elastic.replan(self.planner, [sl.name for sl in self.slices])
+                    monitor.mark_exhausted(self._clock, e.estimates)
+                self.exhausted = e.estimates
         return state
 
     def run(self, state: TrainState, n_steps: int,

@@ -281,13 +281,23 @@ def test_path_selection_io_sym():
     # cpu-governed round: event
     heavy = [SimTask(5.0, io_mb=10.0, datanode=0, task_id=i) for i in range(6)]
     assert plan_path(nodes, [heavy], pull=True, uplink_bw=10.0) == "event"
-    # different datanodes or unequal io_mb: event
-    mixed_dn = [SimTask(0.05, io_mb=10.0, datanode=i % 2, task_id=i)
-                for i in range(6)]
-    assert plan_path(nodes, [mixed_dn], pull=True, uplink_bw=10.0) == "event"
+    # a d=2 round-robin stripe over n=2 nodes qualifies for the
+    # multi-datanode closed form (each round: one reader per datanode)
+    striped = [SimTask(0.05, io_mb=10.0, datanode=i % 2, task_id=i)
+               for i in range(6)]
+    assert plan_path(nodes, [striped], pull=True, uplink_bw=10.0) \
+        == "closed-pull-io-sym"
+    # aperiodic datanode sequence or unequal io_mb: event
+    aperiodic = [SimTask(0.05, io_mb=10.0, datanode=d, task_id=i)
+                 for i, d in enumerate((0, 1, 1, 0, 0, 1))]
+    assert plan_path(nodes, [aperiodic], pull=True, uplink_bw=10.0) == "event"
     mixed_mb = [SimTask(0.05, io_mb=10.0 + i, datanode=0, task_id=i)
                 for i in range(6)]
     assert plan_path(nodes, [mixed_mb], pull=True, uplink_bw=10.0) == "event"
+    # stripe width not dividing the fleet (d=3 over n=2): event
+    trio = [SimTask(0.05, io_mb=10.0, datanode=i % 3, task_id=i)
+            for i in range(6)]
+    assert plan_path(nodes, [trio], pull=True, uplink_bw=10.0) == "event"
 
 
 # --------------------------------------------------------------------------
@@ -729,3 +739,121 @@ def test_pull_hetero_batched_identical_nodes_tie_break():
     assert_results_match(oracle, run_pull_stage(nodes, tasks))
     assert_results_match(oracle,
                          run_stage_events(nodes, [tasks], pull=True))
+
+
+# --------------------------------------------------------------------------
+# multi-datanode symmetric co-readers (satellite: d-striped closed form)
+# --------------------------------------------------------------------------
+
+def _random_io_sym_striped(rng):
+    """Symmetric d-striped co-reader stage guaranteed network-governed:
+    task k reads datanode ``dns[k % d]`` with ``d | n``, CPU spans drawn
+    well inside the smallest drain any round can produce (a lone tail
+    reader at full uplink rate)."""
+    d = int(rng.integers(1, 5))
+    n = d * int(rng.integers(1, 3))
+    speeds = rng.uniform(0.2, 3.0, n)
+    io_mb = float(rng.uniform(10.0, 50.0))
+    bw = float(rng.uniform(5.0, 50.0))
+    n_tasks = int(rng.integers(1, 41))
+    d_min = io_mb / bw                       # lone-reader drain
+    nodes = [SimNode.constant(f"n{i}", float(s),
+                              float(rng.uniform(0.0, 0.1 * d_min)))
+             for i, s in enumerate(speeds)]
+    dns = [int(x) for x in rng.permutation(8)[:d]]
+    works = rng.uniform(0.0, 0.5 * d_min * speeds.min(), n_tasks)
+    tasks = [SimTask(float(w), io_mb=io_mb, datanode=dns[i % d], task_id=i)
+             for i, w in enumerate(works)]
+    return nodes, tasks, bw
+
+
+@given(seed=st.integers(0, 10_000))
+def test_closed_form_io_sym_striped_matches_event_path(seed):
+    """The d-striped generalization: every full round puts n/d co-readers
+    on each of d datanodes (simultaneous per-group drains), the tail
+    round's groups drain independently; the closed form is pinned against
+    the causal event calendar across random stripe widths."""
+    rng = np.random.default_rng(seed)
+    nodes, tasks, bw = _random_io_sym_striped(rng)
+    assert plan_path(nodes, [tasks], pull=True, uplink_bw=bw) \
+        == "closed-pull-io-sym"
+    event = run_stage_events(nodes, [tasks], pull=True, uplink_bw=bw)
+    assert_results_match(
+        event, simulate_stage(nodes, [tasks], pull=True, uplink_bw=bw))
+
+
+def test_io_sym_striped_round_structure():
+    """4 nodes / 2 datanodes, 100 MB/s uplink, 100 MB tasks: each full
+    round is two 2-reader groups draining together after 2s; the 1-task
+    tail is a lone reader at the full rate (1s)."""
+    nodes = [SimNode.constant(f"n{i}", 1.0) for i in range(4)]
+    tasks = [SimTask(0.1, io_mb=100.0, datanode=i % 2, task_id=i)
+             for i in range(9)]
+    res = simulate_stage(nodes, [tasks], pull=True, uplink_bw=100.0)
+    assert plan_path(nodes, [tasks], pull=True, uplink_bw=100.0) \
+        == "closed-pull-io-sym"
+    ends = {r.task_id: r.end for r in res.records}
+    assert all(ends[i] == pytest.approx(2.0) for i in range(4))
+    assert all(ends[i] == pytest.approx(4.0) for i in range(4, 8))
+    assert ends[8] == pytest.approx(5.0)      # lone tail reader: 4 + 1
+    assert res.completion == pytest.approx(5.0)
+    assert_results_match(
+        run_stage_events(nodes, [tasks], pull=True, uplink_bw=100.0), res)
+
+
+# --------------------------------------------------------------------------
+# JobContinuation: resumable run_job (satellite: resident splice plumbing)
+# --------------------------------------------------------------------------
+
+def test_resume_validation():
+    from repro.core.engine import JobContinuation
+    nodes = [SimNode.constant("a", 1.0)]
+    stages = [StaticSpec(works=(1.0,))] * 2
+    with pytest.raises(ValueError):
+        run_job(nodes, stages, resume=JobContinuation(3, 0.0))
+    with pytest.raises(ValueError):
+        run_job(nodes, stages, resume=JobContinuation(-1, 0.0))
+    # next_stage == len(stages): legal empty tail anchored at the clock
+    sched = run_job(nodes, stages, resume=JobContinuation(2, 7.5))
+    assert sched.completion == pytest.approx(7.5) and sched.stages == []
+
+
+def test_resume_slices_the_program_tail():
+    """Resuming at stage k from the stage-(k-1) barrier clock reproduces
+    the full run's tail summaries exactly, and the schedule records the
+    continuation so callers can re-align stage indices."""
+    from repro.core.engine import JobContinuation
+    nodes = [SimNode.constant("a", 2.0, 0.01), SimNode.constant("b", 1.0)]
+    stages = [StaticSpec(works=(2.0, 1.0)),
+              PullSpec(n_tasks=6, task_work=0.5),
+              StaticSpec(works=(1.0, 2.0)),
+              StaticSpec(works=(3.0, 3.0))]
+    full = run_job(nodes, stages)
+    cont = JobContinuation(2, full.stages[1].completion)
+    tail = run_job(nodes, stages, resume=cont)
+    assert tail.continuation == cont and full.continuation is None
+    assert tail.completion == pytest.approx(full.completion, rel=REL)
+    assert len(tail.stages) == 2
+    for got, want in zip(tail.stages, full.stages[2:]):
+        assert got.start == pytest.approx(want.start, rel=REL)
+        assert got.completion == pytest.approx(want.completion, rel=REL)
+        for name in want.node_finish:
+            assert got.node_finish[name] == \
+                pytest.approx(want.node_finish[name], rel=REL)
+
+
+def test_resume_carry_folds_into_first_stage():
+    """A (residual, throughputs) carry folds into the resumed stage
+    proportionally to throughput — identical to handing run_job the
+    explicitly folded spec."""
+    from repro.core.engine import JobContinuation
+    nodes = [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+    cont = JobContinuation(0, 4.0, carry=(2.0, (3.0, 1.0)))
+    got = run_job(nodes, [StaticSpec(works=(2.0, 2.0))], resume=cont)
+    want = run_job(nodes, [StaticSpec(works=(3.5, 2.5))], start_time=4.0)
+    assert got.completion == pytest.approx(want.completion, rel=REL)
+    assert got.completion == pytest.approx(7.5)
+    # a zero residual is a no-op carry
+    none = run_job(nodes, [StaticSpec(works=(2.0, 2.0))],
+                   resume=JobContinuation(0, 4.0, carry=(0.0, (1.0, 1.0))))
+    assert none.completion == pytest.approx(6.0)

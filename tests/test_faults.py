@@ -781,6 +781,64 @@ def test_trace_validation_and_queries():
     assert lost_work(7.0, 7.0 + 1e-12) == 0.0
 
 
+def test_trace_shift_restrict_edge_cases():
+    """shift/restrict corners the resident + elastic drivers rely on:
+    negative shifts, empty/superset/reordered keep sets, and policy/grain
+    preservation on every derived trace."""
+    retry = RetryPolicy(max_attempts=2, relaunch_overhead=0.5, backoff=2.0)
+    tr = FaultTrace((NodeCrash(0, 2.0, recover_at=4.0, cold_restart=True),
+                     SpotPreemption(2, 3.0, warning=1.0)),
+                    retry=retry, checkpoint_grain=0.25)
+
+    # a negative shift moves events before t=0 and stays queryable ...
+    back = tr.shift(-3.0)
+    assert back.events[0].at == _approx(-1.0)
+    assert back.state_at(0, -0.5) == DEAD and back.state_at(0, 1.5) == 0
+    assert back.state_at(2, 0.5) == DRAINING
+    # ... and shifting back is an exact inverse (frozen-dataclass equality)
+    assert back.shift(3.0) == tr
+    # the retry policy and checkpoint grain ride every derived trace
+    assert back.retry == retry and back.checkpoint_grain == 0.25
+
+    # restrict to the empty fleet: no events, no max node, all-alive
+    empty = tr.restrict([])
+    assert empty.events == () and empty.max_node() == -1
+    assert empty.state_at(0, 2.5) == 0
+    assert empty.retry == retry and empty.checkpoint_grain == 0.25
+
+    # the keep *order* defines the renumbering: keep=[2, 0] -> 2->0, 0->1
+    swapped = tr.restrict([2, 0])
+    assert {type(e).__name__: e.node for e in swapped.events} == \
+        {"SpotPreemption": 0, "NodeCrash": 1}
+    assert swapped.state_at(0, 3.5) == DRAINING   # the preemption moved
+    assert swapped.state_at(1, 2.5) == DEAD
+    crash = next(e for e in swapped.events if isinstance(e, NodeCrash))
+    assert crash.cold_restart and crash.recover_at == 4.0
+    assert swapped.cold_restarts() == [(4.0, 1)]
+    pre = next(e for e in swapped.events if isinstance(e, SpotPreemption))
+    assert pre.warning == 1.0
+
+    # a keep list naming untouched nodes (superset) renumbers around them
+    sup = tr.restrict([3, 0, 5, 2])
+    assert {e.node for e in sup.events} == {1, 3}
+    assert sup.max_node() == 3
+    # ... and a reordering that keeps everything is a pure permutation
+    assert tr.restrict([0, 1, 2]).events == tr.events
+
+    # restricting away every faulted node leaves a clean trace that still
+    # composes with shift and never overlaps anything
+    clean = tr.restrict([1]).shift(100.0)
+    assert clean.events == () and clean.overlaps(0.0, math.inf) is False
+
+    # per-node non-overlap is re-validated on the renumbered events, so a
+    # legal reordering of a two-interval node stays legal
+    multi = FaultTrace((NodeCrash(0, 1.0, recover_at=3.0),
+                        NodeCrash(0, 5.0), NodeCrash(1, 2.0)))
+    re = multi.restrict([1, 0])
+    assert [(e.node, e.at) for e in re.events] == \
+        [(1, 1.0), (0, 2.0), (1, 5.0)]
+
+
 # --------------------------------------------------------------------------
 # run_job: cache no-poisoning, reskew fold, adaptive composition
 # --------------------------------------------------------------------------

@@ -1,0 +1,985 @@
+"""Resident cluster loop vs. a naive restart-per-event rescan oracle.
+
+The oracle below restates the documented resident semantics (the
+``repro.core.resident`` module docstring) with none of the calendar's
+machinery: flow rates recomputed from scratch at every event, full
+``SimNode`` profile walks instead of cursors, list scans instead of the
+version-skipped heap, and — crucially — **no whole-job fast path and no
+tail fast-forward**: the oracle always grinds through its own event loop,
+so the calendar's ``run_job`` delegations (entry fast path, resumable
+splice) are pinned against first-principles mechanics at 1e-9.
+
+Randomized differential suites cover: concurrent jobs (>= 2) under fault
+traces AND elastic resizes, weighted fair shares with shedding/rescue,
+per-job retry budgets, adaptive re-splits across spliced barriers, pull
+and static stages sharing datanode uplinks across jobs, and the
+``recovery="restart"`` baseline.  Crafted scenarios pin exact numbers for
+shed/rescue, SLO attainment, splice-beats-restart, and validation.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.engine import (
+    AdaptivePlan, PullSpec, StageSummary, StaticSpec, run_job,
+    run_job_cache_clear,
+)
+from repro.core.faults import (
+    DEAD, DRAINING, FaultTrace, NodeCrash, RetryPolicy, SpotPreemption,
+    lost_work,
+)
+from repro.core.partitioner import hemt_split_floats
+from repro.core.resident import (
+    JobOutcome, ResidentCalendar, ResidentJob, ResidentResult, ResizeEvent,
+    fair_shares,
+)
+from repro.core.simulator import SimNode, SimTask
+
+REL = ABS = 1e-9
+_EPS = 1e-9
+_RANK = {"recover": 0, "drain": 1, "kill": 2, "resize": 3, "arrive": 4}
+
+
+def _approx(x):
+    return pytest.approx(x, rel=REL, abs=ABS)
+
+
+# --------------------------------------------------------------------------
+# the oracle: full-rescan resident loop per the documented semantics
+# --------------------------------------------------------------------------
+
+class _OJob:
+    def __init__(self, job, cold):
+        self.job = job
+        self.status = "idle"
+        self.arrived = job.arrival <= 0.0
+        self.admitted_at = None
+        self.nodes = []
+        self.stage_idx = 0
+        self.stage_start = 0.0
+        self.stage_total = 0.0
+        self.carry = 0.0
+        self.pending = True
+        self.open = 0
+        self.overflow = []
+        self.shared = []
+        self.exec_work = {}
+        self.counts = {}
+        self.fin = {}
+        self.planned_dict = None
+        self.requeues = {}
+        self.penalty = {}
+        self.task_seq = 0
+        self.cold = list(cold)
+        self.summaries = []
+        self.planned = []
+        self.completion = math.inf
+        self.lost = 0.0
+        self.retries = 0
+        self.sheds = 0
+
+    def rank(self):
+        return (self.job.priority, self.job.arrival, self.job.name)
+
+    def active(self):
+        return self.arrived and self.status != "done"
+
+    def next_tid(self):
+        self.task_seq += 1
+        return self.task_seq
+
+
+def oracle_resident(nodes, jobs, uplink_bw=None, faults=None, resizes=(),
+                    recovery="splice"):
+    """Naive resident oracle: rescan everything at every event."""
+    nodes = list(nodes)
+    names = [nd.name for nd in nodes]
+    bw = uplink_bw if uplink_bw else None
+    ckpt = faults.checkpoint_grain if faults is not None else 0.0
+    if faults is not None and not faults.events:
+        faults = None
+    n0 = len(nodes)
+    dead = [faults.state_at(i, 0.0) == DEAD if faults else False
+            for i in range(n0)]
+    drain = [faults.state_at(i, 0.0) == DRAINING if faults else False
+             for i in range(n0)]
+    owner = [None] * n0
+    busy = [False] * n0
+    tid = [0] * n0
+    t_started = [0.0] * n0
+    launch = [0.0] * n0
+    att_work = [0.0] * n0
+    att_io = [0.0] * n0
+    io_left = [0.0] * n0
+    cpu_done = [0.0] * n0
+    dn = [-1] * n0
+
+    cold = faults.cold_restarts() if faults else []
+    jst = [_OJob(j, cold) for j in jobs]
+
+    ext = []
+    if faults is not None:
+        for (tt, node, kind) in faults.sub_events(0.0):
+            ext.append((tt, _RANK[kind], (node,), kind, node))
+    for seq, rz in enumerate(sorted(resizes, key=lambda r: r.at)):
+        ext.append((rz.at, _RANK["resize"], (seq,), "resize", rz))
+    for js in jst:
+        if not js.arrived:
+            ext.append((js.job.arrival, _RANK["arrive"],
+                        (js.job.priority, js.job.name), "arrive", js))
+    ext.sort(key=lambda e: (e[0], e[1], e[2]))
+    pend = list(range(len(ext)))
+
+    def usable(i):
+        return not dead[i] and not drain[i]
+
+    def free_nodes():
+        return [i for i in range(len(nodes))
+                if usable(i) and owner[i] is None]
+
+    def ranked():
+        return sorted((js for js in jst if js.active()), key=_OJob.rank)
+
+    def remaining(i, now):
+        if now < launch[i]:
+            return att_work[i]
+        return nodes[i].work_between(now, cpu_done[i])
+
+    def flow_active(i):
+        return busy[i] and bw is not None and dn[i] >= 0 and io_left[i] > _EPS
+
+    def rates():
+        cnt = {}
+        for i in range(len(nodes)):
+            if flow_active(i):
+                cnt[dn[i]] = cnt.get(dn[i], 0) + 1
+        return {d: bw / c for d, c in cnt.items()}
+
+    def release(i):
+        js = owner[i]
+        if js is not None:
+            js.nodes.remove(i)
+            owner[i] = None
+
+    def start_attempt(i, js, tk, now):
+        busy[i] = True
+        tid[i] = tk.task_id
+        t_started[i] = now
+        launch[i] = now + nodes[i].task_overhead \
+            + js.penalty.pop(tk.task_id, 0.0)
+        att_work[i] = tk.cpu_work
+        cpu_done[i] = nodes[i].finish_time(tk.cpu_work, launch[i])
+        if bw is not None and tk.datanode >= 0 and tk.io_mb > _EPS:
+            att_io[i] = tk.io_mb
+            io_left[i] = tk.io_mb
+            dn[i] = tk.datanode
+        else:
+            att_io[i] = 0.0
+            io_left[i] = 0.0
+            dn[i] = -1
+
+    def refill(i, now):
+        js = owner[i]
+        if js is None or busy[i] or dead[i] or drain[i]:
+            return
+        if js.overflow:
+            start_attempt(i, js, js.overflow.pop(0), now)
+        elif js.shared:
+            start_attempt(i, js, js.shared.pop(0), now)
+
+    def wake(js, now):
+        for i in js.nodes:
+            if not busy[i]:
+                refill(i, now)
+
+    def record(js, name, w, now):
+        js.exec_work[name] = js.exec_work.get(name, 0.0) + w
+        js.counts[name] = js.counts.get(name, 0) + 1
+        js.fin[name] = now
+
+    def cancel(i, now, checkpoint, charge):
+        js, t_id = owner[i], tid[i]
+        if js is None or not busy[i]:
+            return
+        executed = att_work[i] - remaining(i, now)
+        saved = 0.0
+        if checkpoint and ckpt > 0.0 and executed > 0.0:
+            saved = min(math.floor((executed + _EPS) / ckpt) * ckpt,
+                        att_work[i])
+        if saved > _EPS:
+            record(js, names[i], saved, now)
+        busy[i] = False
+        was_dn = dn[i]
+        io_left[i] = 0.0
+        dn[i] = -1
+        rem = att_work[i] - saved
+        if rem <= _EPS:
+            js.open -= 1
+            return
+        if charge:
+            k = js.requeues.get(t_id, 0)
+            if k >= js.job.retry.max_attempts - 1:
+                js.open -= 1
+                return
+            js.requeues[t_id] = k + 1
+            js.retries += 1
+            p = js.job.retry.penalty(k + 1)
+            if p > 0.0:
+                js.penalty[t_id] = p
+        if att_io[i] > _EPS and att_work[i] > _EPS:
+            io = att_io[i] * rem / att_work[i]
+        else:
+            io = 0.0
+        js.overflow.append(SimTask(rem, io, was_dn if io > _EPS else -1,
+                                   task_id=t_id))
+
+    def shed(js, now):
+        js.sheds += 1
+        for i in list(js.nodes):
+            if not usable(i):
+                continue
+            cancel(i, now, True, False)
+            release(i)
+        if not js.nodes:
+            js.status = "idle"
+        if js.open == 0 and not js.pending:
+            barrier(js, now)
+
+    def base_split(js, spec, total, nms):
+        if js.job.proportions is not None:
+            return hemt_split_floats(
+                total, [js.job.proportions.get(nm, 1.0) for nm in nms])
+        if (isinstance(spec, StaticSpec) and len(spec.works) == len(nms)
+                and js.carry == 0.0):
+            return list(spec.works)
+        return [total / len(nms)] * len(nms)
+
+    def materialize(js, now, total_override=None):
+        spec = js.job.stages[js.stage_idx]
+        if js.job.adaptive is not None:
+            while js.cold and js.cold[0][0] <= now + _EPS:
+                _, node = js.cold.pop(0)
+                if node < len(names):
+                    js.job.adaptive.estimator.forget(names[node])
+        nms = [names[i] for i in js.nodes]
+        js.exec_work, js.counts, js.fin = {}, {}, {}
+        js.stage_start = now
+        js.pending = False
+        js.status = "running"
+        if isinstance(spec, StaticSpec):
+            if total_override is None:
+                total = sum(spec.works) + js.carry
+            else:
+                total = total_override
+            base = base_split(js, spec, total, nms)
+            js.carry = 0.0
+            if js.job.adaptive is not None:
+                works = list(js.job.adaptive.replan(
+                    nms, StaticSpec(works=tuple(base), io_mb=spec.io_mb,
+                                    datanode=spec.datanode)).works)
+            else:
+                works = base
+            js.stage_total = sum(works)
+            js.planned_dict = dict(zip(nms, works))
+            wsum = js.stage_total
+            for i, w in zip(js.nodes, works):
+                if spec.io_mb > 0.0 and spec.datanode >= 0:
+                    io = spec.io_mb * (w / wsum if wsum > 0.0
+                                       else 1.0 / len(works))
+                else:
+                    io = 0.0
+                js.open += 1
+                start_attempt(i, js, SimTask(
+                    w, io, spec.datanode if io > _EPS else -1,
+                    task_id=js.next_tid()), now)
+        else:
+            w = spec.work_array()
+            wtot = float(w.sum())
+            if total_override is not None:
+                carry = total_override - wtot
+            else:
+                carry = js.carry
+            js.carry = 0.0
+            if carry > 0.0:
+                if wtot > 0.0:
+                    w = w * (1.0 + carry / wtot)
+                else:
+                    w = w + carry / len(w)
+            js.stage_total = float(w.sum())
+            js.planned_dict = None
+            js.shared = [SimTask(float(x), spec.io_mb, spec.datanode,
+                                 task_id=js.next_tid()) for x in w]
+            js.open += len(js.shared)
+            wake(js, now)
+
+    def restart_stage(js, now):
+        for i in list(js.nodes):
+            if busy[i]:
+                busy[i] = False
+                io_left[i] = 0.0
+                dn[i] = -1
+            if not usable(i):
+                release(i)
+        js.overflow = []
+        js.shared = []
+        js.open = 0
+        total = js.stage_total
+        if js.nodes:
+            materialize(js, now, total_override=total)
+        else:
+            js.carry = 0.0
+            js.stage_total = total
+            js.pending = True
+            js.status = "idle"
+
+    def rebalance(now, barrier_job=None):
+        rk = ranked()
+        capacity = sum(usable(i) for i in range(len(nodes)))
+        shares = fair_shares([(js.job.name, js.job.weight) for js in rk],
+                             capacity)
+        for js in rk:
+            if shares[js.job.name] == 0 \
+                    and any(usable(i) for i in js.nodes):
+                shed(js, now)
+        if barrier_job is not None:
+            share = shares.get(barrier_job.job.name, 0)
+            if share > 0:
+                held = sorted(i for i in barrier_job.nodes if usable(i))
+                for i in held[share:]:
+                    release(i)
+                fr = free_nodes()
+                for i in fr[:share - len(barrier_job.nodes)]:
+                    owner[i] = barrier_job
+                    barrier_job.nodes.append(i)
+                barrier_job.nodes.sort()
+        for js in rk:
+            if js.status == "done" or js.nodes or shares[js.job.name] == 0:
+                continue
+            fr = free_nodes()
+            if not fr:
+                continue
+            for i in fr[:shares[js.job.name]]:
+                owner[i] = js
+                js.nodes.append(i)
+            js.nodes.sort()
+            if js.admitted_at is None:
+                js.admitted_at = now
+            js.status = "running"
+            if js.pending:
+                materialize(js, now)
+            else:
+                wake(js, now)
+        for js in jst:
+            if js.status == "running" and js.nodes and not js.pending:
+                wake(js, now)
+
+    def barrier(js, now):
+        nms = list(names)
+        offs = [js.fin.get(nm, js.stage_start) - js.stage_start
+                for nm in nms]
+        ran = [o for nm, o in zip(nms, offs) if js.counts.get(nm, 0)]
+        idle = (max(ran) - min(ran)) if ran else 0.0
+        summ = StageSummary(
+            js.stage_start, now, idle,
+            {nm: js.stage_start + o for nm, o in zip(nms, offs)},
+            {nm: js.counts.get(nm, 0) for nm in nms},
+            {nm: js.exec_work.get(nm, 0.0) for nm in nms})
+        js.summaries.append(summ)
+        js.planned.append(dict(js.planned_dict)
+                          if js.planned_dict is not None else None)
+        if js.job.adaptive is not None:
+            js.job.adaptive.observe(nms, summ)
+        lost = lost_work(js.stage_total, sum(js.exec_work.values()))
+        js.stage_total = 0.0
+        js.stage_idx += 1
+        last = js.stage_idx >= len(js.job.stages)
+        if lost > 0.0:
+            if js.job.fold_lost and not last:
+                js.carry = lost
+            else:
+                js.lost += lost
+        js.requeues.clear()
+        js.penalty.clear()
+        if last:
+            js.status = "done"
+            js.completion = now
+            for i in list(js.nodes):
+                release(i)
+            rebalance(now)
+            return
+        js.pending = True
+        rebalance(now, barrier_job=js)
+        if not js.nodes:
+            js.status = "idle"
+            return
+        materialize(js, now)
+
+    def complete(i, now):
+        js = owner[i]
+        record(js, names[i], att_work[i], now)
+        busy[i] = False
+        io_left[i] = 0.0
+        dn[i] = -1
+        js.open -= 1
+        if drain[i]:
+            release(i)
+        else:
+            refill(i, now)
+        if js.open == 0:
+            barrier(js, now)
+
+    def handle_ext(kind, payload, now):
+        if kind == "kill":
+            i = payload
+            if i < len(nodes):
+                dead[i] = True
+                drain[i] = False
+                js = owner[i]
+                cancel(i, now, True, True)
+                release(i)
+                if js is not None and js.open == 0 and not js.pending:
+                    barrier(js, now)
+                elif js is not None and not js.nodes:
+                    js.status = "idle"
+        elif kind == "drain":
+            i = payload
+            if i < len(nodes):
+                drain[i] = True
+                if not busy[i]:
+                    release(i)
+        elif kind == "recover":
+            i = payload
+            if i < len(nodes):
+                dead[i] = False
+                drain[i] = False
+                if owner[i] is not None and not busy[i]:
+                    release(i)
+        elif kind == "resize":
+            for i in payload.drop:
+                if i >= len(nodes) or dead[i]:
+                    continue
+                js = owner[i]
+                cancel(i, now, True, False)
+                release(i)
+                dead[i] = True
+                drain[i] = False
+                if js is not None and js.open == 0 and not js.pending:
+                    barrier(js, now)
+                elif js is not None and not js.nodes:
+                    js.status = "idle"
+            for nd in payload.add:
+                names.append(nd.name)
+                nodes.append(nd)
+                for arr, z in ((dead, False), (drain, False), (owner, None),
+                               (busy, False), (tid, 0), (dn, -1)):
+                    arr.append(z)
+                for arr in (t_started, launch, att_work, att_io, io_left,
+                            cpu_done):
+                    arr.append(0.0)
+        else:
+            payload.arrived = True
+        rebalance(now)
+        if recovery == "restart" and kind != "arrive":
+            for js in ranked():
+                if js.status == "running":
+                    restart_stage(js, now)
+
+    rebalance(0.0)
+    t = 0.0
+    guard = 0
+    while pend or any(busy):
+        guard += 1
+        assert guard < 200_000, "resident oracle runaway"
+        cur = rates()
+        cands = [(ext[idx][0], 0, idx, "ext") for idx in pend]
+        for i in range(len(nodes)):
+            if not busy[i]:
+                continue
+            if flow_active(i):
+                cands.append((t + io_left[i] / cur[dn[i]], 1, i, "io"))
+            else:
+                cands.append((max(t, cpu_done[i]), 1, i, "done"))
+        if not cands:
+            break
+        tn, _, key, kind = min(cands, key=lambda e: (e[0], e[1], e[2]))
+        for j in range(len(nodes)):
+            if flow_active(j):
+                io_left[j] = max(0.0, io_left[j] - cur[dn[j]] * (tn - t))
+        t = tn
+        if kind == "ext":
+            pend.remove(key)
+            _, _, _, k2, payload = ext[key]
+            handle_ext(k2, payload, t)
+        elif kind == "io":
+            io_left[key] = 0.0
+            if t + _EPS >= cpu_done[key]:
+                complete(key, t)
+        else:
+            complete(key, t)
+
+    outcomes = {}
+    makespan = 0.0
+    for js in jst:
+        done = js.status == "done"
+        comp = js.completion if done else math.inf
+        if done:
+            makespan = max(makespan, comp)
+        elif js.stage_total:
+            js.lost += lost_work(js.stage_total,
+                                 sum(js.exec_work.values()))
+        dl = js.job.deadline
+        outcomes[js.job.name] = JobOutcome(
+            js.job.name, comp, dl,
+            done and (dl is None or comp <= dl + _EPS),
+            "done" if done else "stranded", js.admitted_at,
+            js.summaries, js.planned, js.lost, js.retries, js.sheds)
+    alive = [names[i] for i in range(len(nodes)) if usable(i)]
+    return ResidentResult(outcomes, makespan, alive)
+
+
+def assert_resident_match(oracle, got):
+    assert set(got.outcomes) == set(oracle.outcomes)
+    assert set(got.alive) == set(oracle.alive)
+    assert got.makespan == _approx(oracle.makespan)
+    for name, oo in oracle.outcomes.items():
+        go = got.outcomes[name]
+        assert go.status == oo.status, name
+        if math.isinf(oo.completion):
+            assert math.isinf(go.completion), name
+        else:
+            assert go.completion == _approx(oo.completion), name
+        assert go.attained == oo.attained, name
+        assert (go.admitted_at is None) == (oo.admitted_at is None), name
+        if oo.admitted_at is not None:
+            assert go.admitted_at == _approx(oo.admitted_at), name
+        assert go.retries == oo.retries, name
+        assert go.sheds == oo.sheds, name
+        assert go.lost == _approx(oo.lost), name
+        assert len(go.stages) == len(oo.stages), name
+        for os_, gs in zip(oo.stages, go.stages):
+            assert gs.start == _approx(os_.start)
+            assert gs.completion == _approx(os_.completion)
+            assert gs.idle_time == _approx(os_.idle_time)
+            # fast-forwarded summaries carry the surviving sub-cluster's
+            # names only; the oracle's carry every cluster name — compare
+            # on the union with zero defaults
+            for nm in set(os_.counts) | set(gs.counts):
+                assert gs.counts.get(nm, 0) == os_.counts.get(nm, 0)
+                assert gs.work.get(nm, 0.0) == _approx(
+                    os_.work.get(nm, 0.0))
+                if os_.counts.get(nm, 0):
+                    assert gs.node_finish[nm] == _approx(
+                        os_.node_finish[nm])
+        assert len(go.planned) == len(oo.planned), name
+        for op, gp in zip(oo.planned, go.planned):
+            assert (gp is None) == (op is None)
+            if op is not None:
+                assert set(gp) == set(op)
+                for nm in op:
+                    assert gp[nm] == _approx(op[nm])
+
+
+# --------------------------------------------------------------------------
+# randomized generators
+# --------------------------------------------------------------------------
+
+N_DATANODES = 3
+
+
+def random_cluster(rng, max_nodes=4, constant=True):
+    n = int(rng.integers(2, max_nodes + 1))
+    nodes = []
+    for i in range(n):
+        if constant or rng.random() < 0.6:
+            prof = [(0.0, float(rng.uniform(0.3, 3.0)))]
+        else:
+            n_seg = int(rng.integers(2, 4))
+            breaks = np.concatenate(
+                [[0.0], np.cumsum(rng.uniform(0.5, 5.0, n_seg - 1))])
+            prof = [(float(tb), float(rng.uniform(0.3, 3.0)))
+                    for tb in breaks]
+        nodes.append(SimNode(f"n{i}", prof, float(rng.uniform(0.0, 0.2))))
+    return nodes
+
+
+def random_job_specs(rng, n_jobs=None):
+    """Serializable job descriptions — built fresh (own AdaptivePlan) for
+    the calendar and the oracle so estimator state is never shared."""
+    n_jobs = n_jobs if n_jobs is not None else int(rng.integers(1, 4))
+    specs = []
+    for j in range(n_jobs):
+        stages = []
+        for _ in range(int(rng.integers(1, 4))):
+            io = float(rng.uniform(0.5, 5.0)) if rng.random() < 0.4 else 0.0
+            d = int(rng.integers(0, N_DATANODES)) if io else -1
+            if rng.random() < 0.6:
+                width = int(rng.integers(1, 5))
+                stages.append(("static",
+                               tuple(float(w) for w in
+                                     rng.uniform(0.2, 5.0, width)), io, d))
+            else:
+                k = int(rng.integers(1, 6))
+                stages.append(("pull",
+                               tuple(float(w) for w in
+                                     rng.uniform(0.2, 3.0, k)), io, d))
+        props = None
+        if rng.random() < 0.2:
+            props = {f"n{i}": float(rng.uniform(0.5, 3.0))
+                     for i in range(int(rng.integers(1, 4)))}
+        specs.append(dict(
+            name=f"j{j}",
+            stages=tuple(stages),
+            arrival=(0.0 if rng.random() < 0.6
+                     else float(rng.uniform(0.1, 6.0))),
+            priority=int(rng.integers(0, 3)),
+            weight=float(rng.uniform(0.5, 3.0)),
+            deadline=(None if rng.random() < 0.5
+                      else float(rng.uniform(2.0, 30.0))),
+            retry=dict(max_attempts=int(rng.integers(1, 4)),
+                       relaunch_overhead=float(rng.choice([0.0, 0.3])),
+                       backoff=float(rng.choice([1.0, 2.0]))),
+            adaptive=rng.random() < 0.4,
+            proportions=props,
+            fold_lost=rng.random() < 0.7,
+        ))
+    return specs
+
+
+def build_jobs(specs):
+    jobs = []
+    for s in specs:
+        stages = []
+        for kind, works, io, d in s["stages"]:
+            if kind == "static":
+                stages.append(StaticSpec(works=works, io_mb=io, datanode=d))
+            else:
+                stages.append(PullSpec(works=works, io_mb=io, datanode=d))
+        jobs.append(ResidentJob(
+            s["name"], tuple(stages), arrival=s["arrival"],
+            priority=s["priority"], weight=s["weight"],
+            deadline=s["deadline"], retry=RetryPolicy(**s["retry"]),
+            adaptive=AdaptivePlan() if s["adaptive"] else None,
+            proportions=s["proportions"], fold_lost=s["fold_lost"]))
+    return jobs
+
+
+def random_trace(rng, n, t_hi=10.0):
+    if rng.random() < 0.25:
+        return None
+    events = []
+    hit = rng.permutation(n)[:int(rng.integers(1, min(n, 3) + 1))]
+    for nd in hit:
+        at = float(rng.uniform(0.1, t_hi))
+        u = rng.random()
+        if u < 0.35:
+            events.append(NodeCrash(int(nd), at))
+        elif u < 0.75:
+            events.append(NodeCrash(
+                int(nd), at, recover_at=at + float(rng.uniform(0.5, 5.0)),
+                cold_restart=rng.random() < 0.3))
+        else:
+            events.append(SpotPreemption(
+                int(nd), at, warning=float(rng.choice([0.0, 0.5, 1.5]))))
+    return FaultTrace(tuple(events),
+                      checkpoint_grain=float(rng.choice([0.0, 0.25, 1.0])))
+
+
+def random_resizes(rng, t_hi=10.0):
+    out = []
+    for r in range(int(rng.integers(0, 3))):
+        add = tuple(
+            SimNode(f"x{r}{k}", [(0.0, float(rng.uniform(0.3, 2.5)))],
+                    float(rng.uniform(0.0, 0.2)))
+            for k in range(int(rng.integers(0, 3))))
+        drop = tuple(int(i) for i in
+                     rng.permutation(4)[:int(rng.integers(0, 2))])
+        if not add and not drop:
+            continue
+        out.append(ResizeEvent(float(rng.uniform(0.2, t_hi)),
+                               add=add, drop=drop))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# randomized differential suites (calendar vs. oracle at 1e-9)
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_single_job_clean(seed):
+    """One clean job: the calendar's whole-job run_job fast path (closed
+    forms + solve LRU) against the oracle's first-principles loop."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng, constant=False)
+    specs = random_job_specs(rng, n_jobs=1)
+    specs[0]["arrival"] = 0.0
+    bw = None if rng.random() < 0.3 else float(rng.uniform(0.5, 4.0))
+    run_job_cache_clear()
+    got = ResidentCalendar(nodes, uplink_bw=bw).run(build_jobs(specs))
+    oracle = oracle_resident(nodes, build_jobs(specs), uplink_bw=bw)
+    assert_resident_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_multi_job_fair_share(seed):
+    """>= 2 concurrent jobs, no externals: weighted fair shares, staggered
+    arrivals, barrier trim/grow, shedding under admission pressure, and
+    cross-job datanode flow sharing."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    specs = random_job_specs(rng, n_jobs=int(rng.integers(2, 4)))
+    bw = None if rng.random() < 0.3 else float(rng.uniform(0.5, 4.0))
+    run_job_cache_clear()
+    got = ResidentCalendar(nodes, uplink_bw=bw).run(build_jobs(specs))
+    oracle = oracle_resident(nodes, build_jobs(specs), uplink_bw=bw)
+    assert_resident_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_faults_resizes_multi_job(seed):
+    """The acceptance scenario: faults AND elastic resizes over >= 2
+    concurrent jobs — splice-in recovery, retry budgets, rescue passes,
+    tail fast-forward — pinned against the rescan oracle at 1e-9."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    specs = random_job_specs(rng, n_jobs=int(rng.integers(2, 4)))
+    bw = None if rng.random() < 0.3 else float(rng.uniform(0.5, 4.0))
+    trace = random_trace(rng, len(nodes))
+    resizes = random_resizes(rng)
+    run_job_cache_clear()
+    got = ResidentCalendar(nodes, uplink_bw=bw, faults=trace,
+                           resizes=resizes).run(build_jobs(specs))
+    oracle = oracle_resident(nodes, build_jobs(specs), uplink_bw=bw,
+                             faults=trace, resizes=resizes)
+    assert_resident_match(oracle, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_restart_baseline(seed):
+    """recovery='restart': every capacity event aborts and re-materializes
+    running stages from scratch — the benchmarked baseline must match the
+    oracle running the same abort rule."""
+    rng = np.random.default_rng(seed)
+    nodes = random_cluster(rng)
+    specs = random_job_specs(rng, n_jobs=int(rng.integers(1, 3)))
+    bw = None if rng.random() < 0.5 else float(rng.uniform(0.5, 4.0))
+    trace = random_trace(rng, len(nodes))
+    resizes = random_resizes(rng)
+    run_job_cache_clear()
+    got = ResidentCalendar(nodes, uplink_bw=bw, faults=trace,
+                           resizes=resizes,
+                           recovery="restart").run(build_jobs(specs))
+    oracle = oracle_resident(nodes, build_jobs(specs), uplink_bw=bw,
+                             faults=trace, resizes=resizes,
+                             recovery="restart")
+    assert_resident_match(oracle, got)
+
+
+# --------------------------------------------------------------------------
+# crafted scenarios: exact numbers per the documented semantics
+# --------------------------------------------------------------------------
+
+def _two_nodes():
+    return [SimNode.constant("a", 1.0), SimNode.constant("b", 1.0)]
+
+
+def test_fast_path_matches_run_job_exactly():
+    """A single clean job must ride run_job wholesale — bitwise, not just
+    1e-9: same completion, same summaries."""
+    nodes = [SimNode.constant("a", 2.0), SimNode.constant("b", 1.0)]
+    spec = StaticSpec(works=(4.0, 2.0))
+    run_job_cache_clear()
+    res = ResidentCalendar(nodes).run(
+        [ResidentJob("only", (spec, spec))])
+    run_job_cache_clear()
+    sched = run_job(nodes, [spec, spec])
+    out = res.outcomes["only"]
+    assert out.completion == sched.completion
+    assert [s.completion for s in out.stages] \
+        == [s.completion for s in sched.stages]
+    assert out.planned == [{"a": 4.0, "b": 2.0}] * 2
+    assert out.status == "done" and out.admitted_at == 0.0
+
+
+def test_fair_shares_policy():
+    assert fair_shares([("a", 2.0), ("b", 1.0), ("c", 1.0)], 4) \
+        == {"a": 2, "b": 1, "c": 1}
+    # capacity below job count: tail jobs shed to zero
+    assert fair_shares([("a", 1.0), ("b", 1.0), ("c", 1.0)], 2) \
+        == {"a": 1, "b": 1, "c": 0}
+    assert fair_shares([("a", 1.0)], 0) == {"a": 0}
+    assert fair_shares([], 3) == {}
+
+
+def test_shed_and_rescue_cycle():
+    """Three equal jobs on two nodes: the lowest-priority job is shed at
+    admission (one shed event), stalls, and is rescued the moment a
+    higher-priority job finishes and frees its node."""
+    nodes = _two_nodes()
+    jobs = [ResidentJob("hi", (StaticSpec(works=(2.0,)),), priority=0),
+            ResidentJob("mid", (StaticSpec(works=(3.0,)),), priority=1),
+            ResidentJob("lo", (StaticSpec(works=(1.0,)),), priority=2)]
+    res = ResidentCalendar(nodes).run(jobs)
+    assert res.outcomes["hi"].completion == _approx(2.0)
+    assert res.outcomes["mid"].completion == _approx(3.0)
+    # lo admitted only when hi's node frees at t=2
+    lo = res.outcomes["lo"]
+    assert lo.admitted_at == _approx(2.0)
+    assert lo.completion == _approx(3.0)
+    assert lo.status == "done"
+    assert_resident_match(oracle_resident(_two_nodes(), [
+        ResidentJob("hi", (StaticSpec(works=(2.0,)),), priority=0),
+        ResidentJob("mid", (StaticSpec(works=(3.0,)),), priority=1),
+        ResidentJob("lo", (StaticSpec(works=(1.0,)),), priority=2)]), res)
+
+
+def test_mid_stage_shed_checkpoints_without_retry_charge():
+    """A higher-priority arrival sheds the running low-priority job: its
+    attempt checkpoints at the grain boundary, no retry is charged, and
+    the residual resumes when capacity returns."""
+    nodes = [SimNode.constant("a", 1.0)]
+    trace = FaultTrace((), checkpoint_grain=1.0)
+    lo = ResidentJob("lo", (StaticSpec(works=(10.0,)),), priority=1)
+    hi = ResidentJob("hi", (StaticSpec(works=(2.0,)),), priority=0,
+                     arrival=3.0)
+    res = ResidentCalendar(nodes, faults=trace).run([lo, hi])
+    # lo runs [0,3), sheds with 3 units checkpointed; hi runs [3,5];
+    # lo's 7-unit residual resumes at 5 and finishes at 12
+    assert res.outcomes["hi"].completion == _approx(5.0)
+    out = res.outcomes["lo"]
+    assert out.completion == _approx(12.0)
+    assert out.sheds == 1 and out.retries == 0
+    assert out.lost == _approx(0.0)
+
+
+def test_splice_strictly_beats_restart_per_event():
+    """The tentpole ordering: under the same kill+recover trace the
+    splicing calendar keeps checkpointed progress while the restart
+    baseline re-runs the stage from scratch."""
+    nodes = _two_nodes()
+    trace = FaultTrace((NodeCrash(1, 2.0, recover_at=3.0),),
+                       checkpoint_grain=1.0)
+    job = dict(name="j", stages=(StaticSpec(works=(4.0, 4.0)),),
+               retry=RetryPolicy(max_attempts=3))
+    splice = ResidentCalendar(_two_nodes(), faults=trace).run(
+        [ResidentJob(job["name"], job["stages"], retry=job["retry"])])
+    restart = ResidentCalendar(_two_nodes(), faults=trace,
+                               recovery="restart").run(
+        [ResidentJob(job["name"], job["stages"], retry=job["retry"])])
+    s = splice.outcomes["j"].completion
+    r = restart.outcomes["j"].completion
+    assert s < r - 1e-6, (s, r)
+    # splice: b's 2 checkpointed units survive, only the 2-unit residual
+    # re-runs on a after its own macrotask -> a finishes 4+2 at t=6
+    assert s == _approx(6.0)
+    assert nodes is not None
+
+
+def test_deadline_slo_attainment():
+    nodes = _two_nodes()
+    jobs = [ResidentJob("meets", (StaticSpec(works=(2.0,)),),
+                        priority=0, deadline=2.5),
+            ResidentJob("misses", (StaticSpec(works=(4.0,)),),
+                        priority=1, deadline=1.0)]
+    res = ResidentCalendar(nodes).run(jobs)
+    assert res.outcomes["meets"].attained is True
+    assert res.outcomes["misses"].attained is False
+    assert res.attainment() == _approx(0.5)
+    # a job with no deadline never counts against attainment
+    res2 = ResidentCalendar(_two_nodes()).run(
+        [ResidentJob("free", (StaticSpec(works=(1.0, 1.0)),))])
+    assert res2.attainment() == 1.0
+
+
+def test_stranded_job_reports_inf_and_lost_work():
+    """The fleet's only node dies with retry budget left: the residual
+    waits in the overflow queue forever — stranded, not done."""
+    nodes = [SimNode.constant("a", 1.0)]
+    trace = FaultTrace((NodeCrash(0, 1.0),), checkpoint_grain=1.0)
+    res = ResidentCalendar(nodes, faults=trace).run(
+        [ResidentJob("j", (StaticSpec(works=(5.0,)),),
+                     retry=RetryPolicy(max_attempts=3))])
+    out = res.outcomes["j"]
+    assert out.status == "stranded"
+    assert math.isinf(out.completion)
+    assert out.attained is False
+    assert out.lost == _approx(4.0)       # 1 checkpointed, 4 stranded
+    assert res.alive == []
+    assert_resident_match(oracle_resident(
+        [SimNode.constant("a", 1.0)],
+        [ResidentJob("j", (StaticSpec(works=(5.0,)),),
+                     retry=RetryPolicy(max_attempts=3))],
+        faults=trace), res)
+
+    # retries EXHAUSTED on the last stage instead: the barrier fires at
+    # the kill, the loss is eaten, and the job counts as done
+    res2 = ResidentCalendar([SimNode.constant("a", 1.0)],
+                            faults=trace).run(
+        [ResidentJob("j", (StaticSpec(works=(5.0,)),),
+                     retry=RetryPolicy(max_attempts=1))])
+    out2 = res2.outcomes["j"]
+    assert out2.status == "done"
+    assert out2.completion == _approx(1.0)
+    assert out2.lost == _approx(4.0)
+
+
+def test_elastic_resize_splices_in_new_capacity():
+    """A resize that doubles the fleet mid-job: the running stage keeps
+    its width (lazy assignment), the next barrier grows onto the new
+    nodes."""
+    nodes = [SimNode.constant("a", 1.0)]
+    rz = ResizeEvent(1.0, add=(SimNode.constant("b", 1.0),))
+    spec = StaticSpec(works=(4.0,))
+    res = ResidentCalendar(nodes, resizes=(rz,)).run(
+        [ResidentJob("j", (spec, spec))])
+    out = res.outcomes["j"]
+    # stage 0 finishes on a alone at t=4; stage 1 splits 4 units evenly
+    # over {a, b} -> completion 6
+    assert out.stages[0].completion == _approx(4.0)
+    assert out.planned[1] == {"a": _approx(2.0), "b": _approx(2.0)}
+    assert out.completion == _approx(6.0)
+    assert set(res.alive) == {"a", "b"}
+
+
+def test_resident_validation():
+    nodes = _two_nodes()
+    with pytest.raises(ValueError):
+        ResidentJob("j", ())
+    with pytest.raises(ValueError):
+        ResidentJob("j", (StaticSpec(works=(1.0,)),), weight=0.0)
+    with pytest.raises(ValueError):
+        ResidentJob("j", (object(),))
+    with pytest.raises(ValueError):       # mitigation belongs to run_job
+        from repro.core.speculation import WorkStealing
+        ResidentJob("j", (PullSpec(works=(1.0,),
+                                   mitigation=WorkStealing(grain=0.5)),))
+    with pytest.raises(ValueError):
+        ResizeEvent(-1.0)
+    with pytest.raises(ValueError):
+        ResidentCalendar(nodes, recovery="magic")
+    with pytest.raises(ValueError):       # trace names a node never added
+        ResidentCalendar(nodes, faults=FaultTrace((NodeCrash(5, 1.0),)))
+    with pytest.raises(ValueError):       # duplicate job names
+        ResidentCalendar(nodes).run(
+            [ResidentJob("j", (StaticSpec(works=(1.0,)),)),
+             ResidentJob("j", (StaticSpec(works=(2.0,)),))])
+    cal = ResidentCalendar(_two_nodes())
+    cal.run([ResidentJob("j", (StaticSpec(works=(1.0, 1.0)),))])
+    with pytest.raises(RuntimeError):     # single-use
+        cal.run([ResidentJob("k", (StaticSpec(works=(1.0, 1.0)),))])
+    assert ResidentCalendar(_two_nodes()).run([]).outcomes == {}
+
+
+def test_bench_resident_orderings():
+    """Acceptance rows: splice strictly beats restart-per-event on the
+    same event sequence, and SLO attainment orders OA-HeMT >= HomT >=
+    stale (proportions-pinned) HeMT with OA-HeMT strictly ahead of
+    stale."""
+    from benchmarks.bench_resident import scenario_completions
+
+    c = scenario_completions()
+    assert c["splice_makespan"] < c["restart_makespan"], c
+    assert c["slo_oa_hemt"] >= c["slo_homt"], c
+    assert c["slo_homt"] >= c["slo_stale"], c
+    assert c["slo_oa_hemt"] > c["slo_stale"], c

@@ -435,3 +435,58 @@ def test_trainer_per_step_mode_rejects_fault_wiring():
     st = train_state_init(KEY, cfg, bundle)
     with pytest.raises(ValueError, match="windowed scheduling"):
         tr.run_window(st, 1, faults=FaultTrace((NodeCrash(0, 1.0),)))
+
+
+def test_fleet_exhausted_error_carries_estimates():
+    """replan on an empty fleet raises the typed FleetExhaustedError with
+    the planner's last-known speeds; legacy except-RuntimeError callers
+    (and message matchers) keep working."""
+    from repro.runtime.elastic import FleetExhaustedError
+
+    p = GrainPlanner(["a", "b"], alpha=0.0)
+    p.observe_step({"a": {"grains": 4, "elapsed": 2.0},
+                    "b": {"grains": 4, "elapsed": 4.0}})
+    with pytest.raises(FleetExhaustedError) as ei:
+        replan(p, [], [])
+    err = ei.value
+    assert isinstance(err, RuntimeError)
+    assert str(err) == "no slices left after resize"
+    assert err.estimates == pytest.approx({"a": 2.0, "b": 1.0})
+    # a planner that never observed anything still raises, with no payload
+    with pytest.raises(FleetExhaustedError) as ei:
+        replan(GrainPlanner(["x"]), [])
+    assert ei.value.estimates == {}
+    # legacy pattern: message-matching RuntimeError handlers
+    try:
+        replan(p, [])
+    except RuntimeError as e:
+        assert "no slices left" in str(e)
+    else:
+        raise AssertionError("replan on empty fleet must raise")
+
+
+def test_trainer_window_exhausted_fleet_halts_gracefully():
+    """The whole fleet dies mid-window: the stranded tail is abandoned,
+    elastic.replan's FleetExhaustedError is caught (not propagated), the
+    trainer records the last-known estimates on self.exhausted, and the
+    monitor logs the terminal 'exhausted' event."""
+    from repro.core.faults import FaultTrace, NodeCrash
+
+    cfg, bundle = _tiny()
+    tr = HeMTTrainer(cfg, bundle, [SliceSpec("solo", [(0.0, 1.0)], 0.05)],
+                     grain_batch=2, global_batch=4, seq_len=16,
+                     mode="oa-hemt", grain_cost=1.0)
+    m = FleetMonitor(["solo"], timeout=4.0)
+    st = train_state_init(KEY, cfg, bundle)
+    assert tr.exhausted is None
+    # step 0 finishes (~2.05s); the permanent crash at 3.0 strands the rest
+    st = tr.run_window(st, 3, faults=FaultTrace((NodeCrash(0, 3.0),)),
+                       monitor=m)
+    assert int(st.step) == 1                 # only the pre-crash barrier ran
+    assert len(tr.reports) == 1
+    assert tr.slices == []                   # the stranded slice was dropped
+    assert tr.exhausted is not None and "solo" in tr.exhausted
+    assert m.exhausted
+    term = [e for e in m.events if e.kind == "exhausted"]
+    assert len(term) == 1 and term[0].slice_name == "*"
+    assert "solo" in term[0].detail
