@@ -1,0 +1,142 @@
+"""Fleet-scale request serving: open-loop arrival traces through the
+resident calendar (``repro.core.arrivals`` + ``repro.runtime.serving``),
+HeMT vs HomT batch sizing on tail latency and SLO attainment.
+
+**Latency scenario** — a Poisson trace (2.5 req/s, 120 s) batches every
+2 s onto a four-replica fleet with 4:3:2:1 speeds.  Each batch decodes
+as one macrotask split across the replicas; the split policy is the
+experiment:
+
+* **hemt**: splits sized per AR(1)-estimated replica throughput (one
+  shared estimator, warm-started by a t=0 probe per replica, updated at
+  every batch barrier);
+* **even**: the HomT-like baseline — equal shares, every batch waits on
+  the 0.5x replica's oversized slice;
+* **oracle**: clairvoyant splits pinned to true mean speeds.
+
+``p99_hemt < p99_even`` and ``att_hemt >= att_even`` (with
+``p99_oracle <= p99_hemt`` up to estimator noise) is the tentpole
+ordering, pinned by tests/test_serving.py.
+
+**Burstable variant** — the fastest replica exhausts its CPU credits at
+t=40 s and drops to 0.6x; the AR(1) loop tracks the fall within a few
+batches while the even split keeps overloading the throttled machine.
+
+**Preemption variant** — the slowest replica is spot-preempted
+mid-trace; killed decode attempts checkpoint (grain 0.25) and requeue,
+and later batches split across the three survivors.
+
+**Generator rows** — million-request traces for each arrival regime
+(Poisson / diurnal thinning / 2-state MMPP), timing ``times()`` alone:
+the open-loop front end must never be the bottleneck of a fleet sweep.
+
+Timed rows land in the ``serving`` section of BENCH_sim.json and are
+gated by ``run.py --check``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import BenchRow, timed
+from repro.core.arrivals import DiurnalTrace, MMPPTrace, PoissonTrace
+from repro.core.faults import FaultTrace, SpotPreemption
+from repro.core.simulator import SimNode
+from repro.runtime.serving import RequestModel, ServingScenario
+
+SPEEDS = (2.0, 1.5, 1.0, 0.5)
+OVERHEAD = 0.01
+WINDOW = 2.0
+RATE = 2.5
+HORIZON = 120.0
+SLO = 4.0
+TRACE = PoissonTrace(RATE, HORIZON, seed=11)
+MODEL = RequestModel(decode_work=1.0, seed=7)
+
+THROTTLE_AT = 40.0               # replica 0 credit-exhaustion instant
+THROTTLE_TO = 0.6                # post-exhaustion speed
+PREEMPT = FaultTrace((SpotPreemption(node=3, at=50.0, warning=1.0),),
+                     checkpoint_grain=0.25)
+
+MILLION = PoissonTrace(10_000.0, 100.0, seed=3)          # ~1e6 arrivals
+MILLION_DIURNAL = DiurnalTrace(6_000.0, 14_000.0, 50.0, 100.0, seed=3)
+MILLION_MMPP = MMPPTrace((4_000.0, 28_000.0), (20.0, 5.0), 100.0, seed=3)
+
+
+def _nodes(variant: str = "flat") -> List[SimNode]:
+    nodes = []
+    for i, s in enumerate(SPEEDS):
+        if variant == "burstable" and i == 0:
+            nodes.append(SimNode(f"n{i}", [(0.0, s),
+                                           (THROTTLE_AT, THROTTLE_TO)],
+                                 OVERHEAD))
+        else:
+            nodes.append(SimNode(f"n{i}", [(0.0, s)], OVERHEAD))
+    return nodes
+
+
+def _scenario(mode: str, variant: str = "flat") -> ServingScenario:
+    return ServingScenario(
+        _nodes(variant), window=WINDOW, mode=mode, slo=SLO, model=MODEL,
+        faults=PREEMPT if variant == "preempt" else None)
+
+
+def _run(mode: str, variant: str = "flat"):
+    return _scenario(mode, variant).run(TRACE)
+
+
+def scenario_metrics() -> Dict[str, float]:
+    """p99 / attainment per batching mode and fleet variant — the
+    numbers the tier-1 ordering test pins."""
+    out: Dict[str, float] = {}
+    for variant in ("flat", "burstable", "preempt"):
+        for mode in ("hemt", "even", "oracle"):
+            rep = _run(mode, variant)
+            key = f"{variant}_{mode}"
+            out[f"p99_{key}"] = rep.p99
+            out[f"att_{key}"] = rep.attainment
+    return out
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    mets: Dict[str, float] = {}
+    for variant in ("flat", "burstable", "preempt"):
+        for mode in ("hemt", "even", "oracle"):
+            rep, us = timed(_run, mode, variant, repeat=3)
+            key = f"{variant}_{mode}"
+            mets[f"p99_{key}"] = rep.p99
+            mets[f"att_{key}"] = rep.attainment
+            out.append(BenchRow(
+                f"serving/{variant}_{mode}", us,
+                f"p50={rep.p50:.3f};p99={rep.p99:.3f};"
+                f"att={rep.attainment:.3f};good={rep.goodput:.3f};"
+                f"n={rep.n_requests}"))
+    for name, trace in (("poisson", MILLION),
+                        ("diurnal", MILLION_DIURNAL),
+                        ("mmpp", MILLION_MMPP)):
+        times, us = timed(trace.times, repeat=3)
+        out.append(BenchRow(
+            f"serving/gen_{name}_1e6", us,
+            f"n={times.size};rate={trace.mean_rate:.0f}/s"))
+    out.append(BenchRow(
+        "serving/orderings", 0.0,
+        f"hemt_beats_even_p99="
+        f"{mets['p99_flat_hemt'] < mets['p99_flat_even']};"
+        f"hemt_beats_even_att="
+        f"{mets['att_flat_hemt'] >= mets['att_flat_even']};"
+        f"oracle_le_hemt="
+        f"{mets['p99_flat_oracle'] <= mets['p99_flat_hemt'] + 1e-6};"
+        f"burst_hemt_beats_even="
+        f"{mets['p99_burstable_hemt'] < mets['p99_burstable_even']};"
+        f"preempt_hemt_beats_even="
+        f"{mets['p99_preempt_hemt'] < mets['p99_preempt_even']}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

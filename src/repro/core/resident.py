@@ -51,6 +51,16 @@ event, while the calendar splices incrementally; both must agree to
     free nodes mid-stage; a recovered node idles in the free pool
     until some job's barrier or rescue claims it.
 
+* **Compatibility (sparse task->server pruning).**  A job created with
+  ``allowed={names}`` only ever takes nodes whose names are in the
+  set — at barrier growth and at rescue; its fair share is computed
+  as usual, so capacity the job cannot hold stays in the free pool
+  for lower-ranked jobs in the same pass.  This is the resident form
+  of the rate-matrix pruning knob (Zhao & Mukherjee 2023, PAPERS.md):
+  request classes whose service rate on a server is pruned simply
+  never land there.  A job whose allowed nodes never free up waits
+  (and strands if the calendar drains first).
+
 * **Shedding (graceful degradation).**  A rebalance that finds a
   node-holding job with share 0 sheds it: every in-flight attempt is
   killed *with* the checkpoint-grain flooring of a fault kill but
@@ -165,7 +175,10 @@ class ResidentJob:
     scheduler's estimator) re-splits static stages at every barrier,
     ``proportions`` (node name -> weight) is the static split of a
     non-adaptive job (the "stale HeMT" baseline), ``fold_lost=False``
-    eats abandoned work instead of folding it into the next stage.
+    eats abandoned work instead of folding it into the next stage,
+    ``allowed`` (a set of node names) restricts which nodes the job may
+    ever hold — the sparse task->server compatibility mask of the
+    rate-matrix pruning idea (see the module docstring).
     Stage specs must not carry mitigation policies — the resident loop's
     recovery *is* the mitigation."""
     name: str
@@ -178,12 +191,19 @@ class ResidentJob:
     adaptive: Optional[AdaptivePlan] = None
     proportions: Optional[Dict[str, float]] = None
     fold_lost: bool = True
+    allowed: Optional[frozenset] = None
 
     def __post_init__(self):
         if not self.stages:
             raise ValueError(f"job {self.name!r} has no stages")
         if self.weight <= 0.0:
             raise ValueError("weight must be positive")
+        if self.allowed is not None:
+            self.allowed = frozenset(self.allowed)
+            if not self.allowed:
+                raise ValueError(
+                    f"job {self.name!r} has an empty allowed set "
+                    "(omit the mask to allow every node)")
         for spec in self.stages:
             if not isinstance(spec, (PullSpec, StaticSpec)):
                 raise ValueError("stages must be PullSpec/StaticSpec")
@@ -376,6 +396,9 @@ class ResidentCalendar:
             return None
         job = jobs[0]
         if job.arrival > 0.0 or job.proportions is not None:
+            return None
+        if job.allowed is not None \
+                and not {nd.name for nd in self.nodes} <= job.allowed:
             return None
         n = len(self.nodes)
         if any(isinstance(s, StaticSpec) and len(s.works) != n
@@ -729,6 +752,9 @@ class ResidentCalendar:
         return [i for i in range(len(self.nodes))
                 if self._usable(i) and self.owner[i] is None]
 
+    def _permits(self, js: _JobState, i: int) -> bool:
+        return js.job.allowed is None or self.names[i] in js.job.allowed
+
     def _rebalance(self, now: float,
                    barrier_job: Optional[_JobState] = None) -> None:
         ranked = self._ranked()
@@ -746,7 +772,8 @@ class ResidentCalendar:
                               if self._usable(i))
                 for i in held[share:]:
                     self._release_node(i)
-                free = self._free_nodes()
+                free = [i for i in self._free_nodes()
+                        if self._permits(barrier_job, i)]
                 for i in free[:share - len(barrier_job.nodes)]:
                     self.owner[i] = barrier_job
                     barrier_job.nodes.append(i)
@@ -754,7 +781,7 @@ class ResidentCalendar:
         for js in ranked:
             if js.status == "done" or js.nodes or shares[js.job.name] == 0:
                 continue
-            free = self._free_nodes()
+            free = [i for i in self._free_nodes() if self._permits(js, i)]
             if not free:
                 continue
             for i in free[:shares[js.job.name]]:

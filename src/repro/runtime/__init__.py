@@ -7,3 +7,6 @@ from repro.runtime.train_loop import (  # noqa: F401
     TrainState, make_grain_step, make_train_step, train_state_init,
 )
 from repro.runtime.serve_loop import HeMTBatcher, make_serve_step  # noqa: F401
+from repro.runtime.serving import (  # noqa: F401
+    RequestModel, ServingReport, ServingScenario, run_round,
+)

@@ -16,6 +16,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.engine import AdaptivePlan
 from repro.core.estimators import ARSpeedEstimator
 from repro.core.partitioner import proportional_split, even_split
 from repro.models.model import decode_step, prefill
@@ -115,6 +116,33 @@ class HeMTBatcher:
         for g in gone:
             self.estimator.forget(g)
         self.replicas = list(replicas)
+
+    def plan(self, **kwargs) -> AdaptivePlan:
+        """An :class:`~repro.core.engine.AdaptivePlan` sharing this
+        batcher's AR(1) state.  The fleet serving scenario
+        (:mod:`repro.runtime.serving`) attaches one per batch job, so
+        every decode split is sized from the same estimates round-based
+        ``dispatch`` uses and every finished batch feeds the estimator
+        back through the resident calendar's barrier observations."""
+        return AdaptivePlan(self.estimator, **kwargs)
+
+    def straggling(self, factor: float = 2.0) -> List[str]:
+        """Replicas whose estimated speed has fallen ``factor``x below
+        the median estimate — the serving-side speculation trigger.
+        Round drivers (:func:`repro.runtime.serving.run_round`) hedge
+        these with duplicate decode attempts via
+        :class:`~repro.core.speculation.SpeculativeCopies`."""
+        if factor < 1.0:
+            raise ValueError("straggler factor must be >= 1.0")
+        if not self.estimator.known():
+            return []
+        speeds = self.estimator.speeds(self.replicas)
+        ordered = sorted(speeds)
+        mid = len(ordered) // 2
+        median = ordered[mid] if len(ordered) % 2 else \
+            0.5 * (ordered[mid - 1] + ordered[mid])
+        return [r for r, v in zip(self.replicas, speeds)
+                if v * factor < median]
 
     def predicted_sync_delay(self, shares: Dict[str, int]) -> float:
         speeds = dict(zip(self.replicas, self.estimator.speeds(self.replicas)))

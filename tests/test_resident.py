@@ -139,6 +139,9 @@ def oracle_resident(nodes, jobs, uplink_bw=None, faults=None, resizes=(),
         return [i for i in range(len(nodes))
                 if usable(i) and owner[i] is None]
 
+    def permits(js, i):
+        return js.job.allowed is None or names[i] in js.job.allowed
+
     def ranked():
         return sorted((js for js in jst if js.active()), key=_OJob.rank)
 
@@ -349,7 +352,7 @@ def oracle_resident(nodes, jobs, uplink_bw=None, faults=None, resizes=(),
                 held = sorted(i for i in barrier_job.nodes if usable(i))
                 for i in held[share:]:
                     release(i)
-                fr = free_nodes()
+                fr = [i for i in free_nodes() if permits(barrier_job, i)]
                 for i in fr[:share - len(barrier_job.nodes)]:
                     owner[i] = barrier_job
                     barrier_job.nodes.append(i)
@@ -357,7 +360,7 @@ def oracle_resident(nodes, jobs, uplink_bw=None, faults=None, resizes=(),
         for js in rk:
             if js.status == "done" or js.nodes or shares[js.job.name] == 0:
                 continue
-            fr = free_nodes()
+            fr = [i for i in free_nodes() if permits(js, i)]
             if not fr:
                 continue
             for i in fr[:shares[js.job.name]]:
@@ -942,10 +945,60 @@ def test_elastic_resize_splices_in_new_capacity():
     assert set(res.alive) == {"a", "b"}
 
 
+def test_allowed_mask_restricts_grants():
+    """A job masked to node b never touches a: it waits for b even while
+    a idles, its fair share is unchanged, and unmasked competitors soak
+    up the capacity it cannot hold."""
+    nodes = _two_nodes()
+    jobs = [ResidentJob("open", (StaticSpec(works=(4.0,)),), priority=0),
+            ResidentJob("pinned", (StaticSpec(works=(2.0,)),), priority=1,
+                        allowed={"b"})]
+    res = ResidentCalendar(nodes).run(jobs)
+    # fair share gives each job one node; 'open' (ranked first) takes a,
+    # 'pinned' can and does take b
+    assert res.outcomes["open"].planned[0] == {"a": _approx(4.0)}
+    assert res.outcomes["pinned"].planned[0] == {"b": _approx(2.0)}
+    assert res.outcomes["pinned"].completion == _approx(2.0)
+    assert_resident_match(oracle_resident(_two_nodes(), [
+        ResidentJob("open", (StaticSpec(works=(4.0,)),), priority=0),
+        ResidentJob("pinned", (StaticSpec(works=(2.0,)),), priority=1,
+                    allowed={"b"})]), res)
+
+    # the masked node busy: 'pinned' stalls while a sits free
+    jobs2 = [ResidentJob("hog", (StaticSpec(works=(3.0,)),), priority=0,
+                         allowed={"b"}),
+             ResidentJob("pinned", (StaticSpec(works=(2.0,)),),
+                         priority=1, allowed={"b"})]
+    res2 = ResidentCalendar(_two_nodes()).run(jobs2)
+    pinned = res2.outcomes["pinned"]
+    assert pinned.admitted_at == _approx(3.0)   # waited for b, not a
+    assert pinned.completion == _approx(5.0)
+    assert_resident_match(oracle_resident(_two_nodes(), [
+        ResidentJob("hog", (StaticSpec(works=(3.0,)),), priority=0,
+                    allowed={"b"}),
+        ResidentJob("pinned", (StaticSpec(works=(2.0,)),), priority=1,
+                    allowed={"b"})]), res2)
+
+
+def test_allowed_mask_whole_fleet_uses_fast_path():
+    """A mask covering every node is a no-op: the single-job whole-fleet
+    fast path still applies and matches run_job bitwise."""
+    nodes = [SimNode.constant("a", 2.0), SimNode.constant("b", 1.0)]
+    spec = StaticSpec(works=(4.0, 2.0))
+    run_job_cache_clear()
+    res = ResidentCalendar(nodes).run(
+        [ResidentJob("j", (spec,), allowed={"a", "b"})])
+    run_job_cache_clear()
+    sched = run_job(nodes, [spec])
+    assert res.outcomes["j"].completion == sched.completion
+
+
 def test_resident_validation():
     nodes = _two_nodes()
     with pytest.raises(ValueError):
         ResidentJob("j", ())
+    with pytest.raises(ValueError):       # empty mask would strand silently
+        ResidentJob("j", (StaticSpec(works=(1.0,)),), allowed=())
     with pytest.raises(ValueError):
         ResidentJob("j", (StaticSpec(works=(1.0,)),), weight=0.0)
     with pytest.raises(ValueError):

@@ -231,6 +231,99 @@ def test_hemt_batcher_learns_replica_speeds():
     assert b.predicted_sync_delay(second) < b.predicted_sync_delay(first)
 
 
+def test_hemt_batcher_min_share_floor_under_extreme_skew():
+    """A 100:1 replica must still receive its floor — starving it would
+    stop the AR(1) loop from ever observing a recovery (paper §5.1's
+    averaging argument needs every executor fed)."""
+    b = HeMTBatcher(["fast", "crawl"], alpha=0.0, min_share=1)
+    b.observe("fast", 1000, 1.0)
+    b.observe("crawl", 10, 1.0)
+    shares = b.dispatch(20)
+    assert shares["crawl"] == 1 and shares["fast"] == 19
+    # without the floor the crawler is starved outright
+    b0 = HeMTBatcher(["fast", "crawl"], alpha=0.0)
+    b0.observe("fast", 1000, 1.0)
+    b0.observe("crawl", 10, 1.0)
+    assert b0.dispatch(20)["crawl"] == 0
+
+
+def test_hemt_batcher_full_forget_tracks_drift():
+    """alpha=0 keeps only the latest sample (the estimator's full-forget
+    convention — alpha is the weight on history, and 1.0 is rejected),
+    so a throttled replica's share collapses within one round."""
+    b = HeMTBatcher(["a", "b"], alpha=0.0)
+    b.observe("a", 100, 1.0)
+    b.observe("b", 100, 1.0)
+    assert b.dispatch(12) == {"a": 6, "b": 6}
+    b.observe("a", 100, 1.0)
+    b.observe("b", 25, 1.0)               # credit exhaustion: 4x slower
+    assert b.dispatch(10) == {"a": 8, "b": 2}
+    # sticky history (alpha=0.9) barely moves after the same drift
+    s = HeMTBatcher(["a", "b"], alpha=0.9)
+    s.observe("a", 100, 1.0)
+    s.observe("b", 100, 1.0)
+    s.observe("a", 100, 1.0)
+    s.observe("b", 25, 1.0)
+    sticky = s.dispatch(10)
+    assert sticky["b"] >= 4
+    with pytest.raises(ValueError):
+        HeMTBatcher(["a"], alpha=1.0)     # estimator rejects alpha=1
+
+
+def test_hemt_batcher_resize_mid_stream():
+    """Removing a replica drops its estimate for good; a later re-add
+    cold-starts at the survivors' mean instead of resurrecting the stale
+    speed."""
+    b = HeMTBatcher(["a", "b", "c"], alpha=0.0)
+    b.observe("a", 200, 1.0)
+    b.observe("b", 100, 1.0)
+    b.observe("c", 10, 1.0)               # the replica about to die
+    b.resize(["a", "b"])
+    assert b.replicas == ["a", "b"]
+    assert b.dispatch(12) == {"a": 8, "b": 4}
+    b.resize(["a", "b", "c"])             # replacement with the old name
+    shares = b.dispatch(12)
+    # cold c is filled with mean(200, 100) = 150: 200:100:150 over 12
+    assert shares == {"a": 5, "b": 3, "c": 4}
+
+
+def test_hemt_batcher_deterministic_split_under_ties():
+    """Equal-speed replicas tie on every fractional remainder; the split
+    must still be a pure function of the inputs (largest-remainder with
+    a stable order), so repeated dispatches agree exactly."""
+    b = HeMTBatcher([f"r{i}" for i in range(4)], alpha=0.0)
+    for r in b.replicas:
+        b.observe(r, 100, 1.0)
+    first = b.dispatch(10)
+    assert all(b.dispatch(10) == first for _ in range(5))
+    assert sum(first.values()) == 10
+    assert sorted(first.values()) == [2, 2, 3, 3]
+    # even-mode ties resolve identically
+    e = HeMTBatcher([f"r{i}" for i in range(4)], mode="even")
+    assert e.dispatch(10) == {"r0": 3, "r1": 3, "r2": 2, "r3": 2}
+
+
+def test_hemt_batcher_plan_shares_estimator_state():
+    b = HeMTBatcher(["a", "b"], alpha=0.0)
+    plan = b.plan()
+    assert plan.estimator is b.estimator
+    b.observe("a", 100, 1.0)
+    b.observe("b", 50, 1.0)
+    assert plan.estimator.speeds(["a", "b"]) == [100.0, 50.0]
+
+
+def test_hemt_batcher_straggling_flags_below_median():
+    b = HeMTBatcher(["a", "b", "c"], alpha=0.0)
+    assert b.straggling() == []           # cold estimator: no signal
+    b.observe("a", 100, 1.0)
+    b.observe("b", 90, 1.0)
+    b.observe("c", 30, 1.0)               # 3x below the median (90)
+    assert b.straggling(factor=2.0) == ["c"]
+    assert b.straggling(factor=4.0) == []
+    with pytest.raises(ValueError):
+        b.straggling(factor=0.5)
+
+
 def test_serve_step_generates():
     cfg, bundle = _tiny()
     from repro.models.model import init_decode_state, init_params

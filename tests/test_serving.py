@@ -1,0 +1,455 @@
+"""Fleet-scale request serving: arrival traces, the serving resident
+path vs the rescan oracle, and the HeMT-vs-HomT latency claims.
+
+Three layers:
+
+* **arrival generators** (``repro.core.arrivals``) — determinism from
+  the seed, hashability of frozen specs, bounds/ordering, expected
+  counts, and the millions-of-requests scale contract;
+* **randomized differential suites** — serving scenarios build resident
+  batch jobs (prefill pulls + macrotask decodes, compatibility masks,
+  faults, burstable replicas) and the calendar's run is pinned against
+  ``oracle_resident`` (tests/test_resident.py's naive per-event rescan)
+  at 1e-9, plus crafted burst / credit-exhaustion / strand scenarios
+  with exact numbers;
+* **policy claims** — the bench scenario's HeMT < HomT p99 / attainment
+  ordering, and the closed-loop ``run_round`` driver (observe feedback,
+  speculation on straggling replicas).
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.arrivals import (
+    DiurnalTrace, MMPPTrace, PoissonTrace, dispatch_epochs,
+)
+from repro.core.engine import run_job_cache_clear
+from repro.core.faults import FaultTrace, NodeCrash, SpotPreemption
+from repro.core.resident import ResidentCalendar
+from repro.core.simulator import SimNode
+from repro.core.speculation import SpeculativeCopies
+from repro.runtime.serve_loop import HeMTBatcher
+from repro.runtime.serving import (
+    RequestModel, ServingReport, ServingScenario, run_round,
+)
+from test_resident import assert_resident_match, oracle_resident
+
+REL = ABS = 1e-9
+
+
+def _approx(x):
+    return pytest.approx(x, rel=REL, abs=ABS)
+
+
+# --------------------------------------------------------------------------
+# arrival traces
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("trace", [
+    PoissonTrace(3.0, 20.0, seed=5),
+    DiurnalTrace(1.0, 5.0, 10.0, 20.0, seed=5),
+    MMPPTrace((1.0, 8.0), (4.0, 1.0), 20.0, seed=5),
+])
+def test_traces_deterministic_sorted_bounded(trace):
+    a, b = trace.times(), trace.times()
+    assert np.array_equal(a, b)           # same seed -> identical trace
+    assert np.all(np.diff(a) >= 0.0)
+    if a.size:
+        assert a[0] >= 0.0 and a[-1] < trace.horizon
+    # frozen specs are hashable and compare by value
+    assert hash(trace) == hash(type(trace)(**{
+        f: getattr(trace, f) for f in trace.__dataclass_fields__}))
+
+
+def test_trace_seeds_differ():
+    a = PoissonTrace(3.0, 20.0, seed=1).times()
+    b = PoissonTrace(3.0, 20.0, seed=2).times()
+    assert a.size != b.size or not np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("trace", [
+    PoissonTrace(50.0, 40.0, seed=9),
+    DiurnalTrace(20.0, 80.0, 10.0, 40.0, seed=9),
+])
+def test_trace_counts_near_expected(trace):
+    n = trace.times().size
+    exp = trace.expected()
+    assert abs(n - exp) < 5.0 * math.sqrt(exp) + 5.0
+
+
+def test_mmpp_counts_near_expected_in_mean():
+    """MMPP counts are over-dispersed (dwell randomness dominates over a
+    few cycles), so the expected() contract is checked on the seed
+    average rather than one realization."""
+    mean = np.mean([MMPPTrace((20.0, 100.0), (5.0, 2.0), 40.0,
+                              seed=s).times().size for s in range(30)])
+    exp = MMPPTrace((20.0, 100.0), (5.0, 2.0), 40.0).expected()
+    assert abs(mean - exp) < 0.15 * exp
+
+
+def test_diurnal_rate_curve():
+    tr = DiurnalTrace(1.0, 5.0, 10.0, 20.0, phase=2.0)
+    assert tr.rate_at(2.0) == _approx(1.0)        # trough at the phase
+    assert tr.rate_at(7.0) == _approx(5.0)        # peak half a period on
+    assert tr.mean_rate == _approx(3.0)
+    assert tr.expected() == _approx(60.0)         # two whole periods
+
+
+def test_mmpp_mean_rate_is_dwell_weighted():
+    tr = MMPPTrace((1.0, 9.0), (3.0, 1.0), 100.0)
+    assert tr.mean_rate == _approx(3.0)
+
+
+def test_million_request_scale():
+    t = PoissonTrace(50_000.0, 20.0, seed=2).times()
+    assert t.size > 900_000
+    assert np.all(np.diff(t) >= 0.0)
+
+
+def test_dispatch_epochs():
+    ep = dispatch_epochs(np.array([0.0, 0.4, 1.9, 2.0, 7.5]), 2.0)
+    assert ep.tolist() == [0, 0, 0, 1, 3]
+    with pytest.raises(ValueError):
+        dispatch_epochs(np.array([1.0]), 0.0)
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: PoissonTrace(-1.0, 10.0),
+    lambda: PoissonTrace(1.0, 0.0),
+    lambda: DiurnalTrace(2.0, 1.0, 10.0, 20.0),
+    lambda: MMPPTrace((1.0,), (0.0,), 10.0),
+    lambda: MMPPTrace((1.0, 2.0), (1.0,), 10.0),
+    lambda: MMPPTrace((1.0,), (1.0,), 10.0, start_state=3),
+])
+def test_trace_validation(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+# --------------------------------------------------------------------------
+# request model & scenario validation
+# --------------------------------------------------------------------------
+
+def test_request_model_sampling():
+    m = RequestModel(decode_work=2.0, work_cv=0.5, classes=3, seed=4)
+    w1, k1 = m.sample(500)
+    w2, k2 = m.sample(500)
+    assert np.array_equal(w1, w2) and np.array_equal(k1, k2)
+    assert abs(w1.mean() - 2.0) < 0.2             # lognormal mean preserved
+    assert set(np.unique(k1)) <= {0, 1, 2}
+    w3, k3 = RequestModel().sample(4)
+    assert w3.tolist() == [1.0] * 4 and k3.tolist() == [0] * 4
+
+
+def test_scenario_validation():
+    nd = [SimNode("a", [(0.0, 1.0)], 0.0)]
+    with pytest.raises(ValueError):
+        ServingScenario(nd, window=0.0)
+    with pytest.raises(ValueError):
+        ServingScenario(nd, window=1.0, mode="magic")
+    with pytest.raises(ValueError):
+        ServingScenario(nd, window=1.0, mask={0: ["ghost"]})
+    with pytest.raises(ValueError):
+        ServingScenario(nd, window=1.0, mask={0: []})
+    with pytest.raises(ValueError):
+        RequestModel(decode_work=0.0)
+    with pytest.raises(ValueError):
+        RequestModel(classes=0)
+
+
+def test_empty_trace_report():
+    nd = [SimNode("a", [(0.0, 1.0)], 0.0)]
+    rep = ServingScenario(nd, window=1.0, slo=2.0).run(np.empty(0))
+    assert rep.n_requests == 0
+    assert rep.attainment == 1.0 and rep.goodput == 0.0
+
+
+# --------------------------------------------------------------------------
+# randomized differential suites: serving jobs vs the rescan oracle
+# --------------------------------------------------------------------------
+
+def _random_fleet(rng, burstable=False):
+    n = int(rng.integers(2, 5))
+    nodes = []
+    for i in range(n):
+        s = float(rng.uniform(0.5, 3.0))
+        if burstable and rng.random() < 0.5:
+            t_b = float(rng.uniform(1.0, 6.0))
+            prof = [(0.0, s), (t_b, s * float(rng.uniform(0.2, 0.8)))]
+        else:
+            prof = [(0.0, s)]
+        nodes.append(SimNode(f"n{i}", prof, float(rng.uniform(0.0, 0.1))))
+    return nodes
+
+
+def _random_scenario(rng, nodes, faults=None, with_mask=False):
+    classes = int(rng.integers(2, 4)) if with_mask else 1
+    mask = None
+    if with_mask:
+        names = [nd.name for nd in nodes]
+        mask = {}
+        for c in range(classes):
+            if rng.random() < 0.7:
+                k = int(rng.integers(1, len(names) + 1))
+                mask[c] = sorted(rng.permutation(names)[:k].tolist())
+    model = RequestModel(
+        decode_work=float(rng.uniform(0.3, 1.5)),
+        work_cv=float(rng.choice([0.0, 0.5])),
+        prefill_mb=float(rng.choice([0.0, 2.0])),
+        prefill_work=float(rng.choice([0.0, 0.2])),
+        classes=classes, seed=int(rng.integers(0, 1000)))
+    return ServingScenario(
+        nodes,
+        window=float(rng.uniform(0.8, 2.0)),
+        model=model,
+        mode=str(rng.choice(["hemt", "even", "oracle"])),
+        slo=None if rng.random() < 0.3 else float(rng.uniform(2.0, 8.0)),
+        uplink_bw=None if model.prefill_mb == 0.0 or rng.random() < 0.3
+        else float(rng.uniform(1.0, 8.0)),
+        datanode=int(rng.integers(0, len(nodes))),
+        faults=faults,
+        mask=mask,
+        alpha=float(rng.choice([0.0, 0.3])),
+        warmup=int(rng.integers(0, 2)),
+        max_prefill_tasks=int(rng.choice([0, 3])))
+
+
+def _differential(rng, scenario, nodes, horizon, faults=None):
+    times = np.sort(rng.uniform(0.0, horizon, int(rng.integers(3, 14))))
+    works, klass = scenario.model.sample(times.size)
+    run_job_cache_clear()
+    jobs_got, _ = scenario.build_jobs(times, works, klass, horizon)
+    jobs_exp, _ = scenario.build_jobs(times, works, klass, horizon)
+    got = ResidentCalendar(nodes, scenario.uplink_bw,
+                           faults=faults).run(jobs_got)
+    exp = oracle_resident(nodes, jobs_exp, uplink_bw=scenario.uplink_bw,
+                          faults=faults)
+    assert_resident_match(exp, got)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_serving_clean(seed):
+    """Serving batch jobs (prefill pulls + single-macrotask decodes,
+    shared-estimator adaptive plans, oracle proportions) through the
+    calendar vs the first-principles rescan oracle."""
+    rng = np.random.default_rng(seed)
+    nodes = _random_fleet(rng, burstable=True)
+    sc = _random_scenario(rng, nodes)
+    _differential(rng, sc, nodes, horizon=8.0)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_serving_masked(seed):
+    """Sparse request->replica compatibility: windows split into per-mask
+    sub-jobs whose ``allowed`` sets prune node grants on both sides."""
+    rng = np.random.default_rng(seed)
+    nodes = _random_fleet(rng)
+    sc = _random_scenario(rng, nodes, with_mask=True)
+    _differential(rng, sc, nodes, horizon=8.0)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_differential_serving_faults(seed):
+    """Crashes and spot preemptions mid-trace: killed decode attempts
+    checkpoint and requeue per the retry budget, later batches split
+    across survivors — still 1e-9 against the oracle."""
+    rng = np.random.default_rng(seed)
+    nodes = _random_fleet(rng, burstable=True)
+    events = []
+    for nd in rng.permutation(len(nodes))[:int(rng.integers(1, 3))]:
+        at = float(rng.uniform(0.5, 7.0))
+        if rng.random() < 0.5:
+            events.append(NodeCrash(
+                int(nd), at,
+                recover_at=None if rng.random() < 0.5
+                else at + float(rng.uniform(0.5, 3.0)),
+                cold_restart=rng.random() < 0.3))
+        else:
+            events.append(SpotPreemption(
+                int(nd), at, warning=float(rng.choice([0.0, 0.5]))))
+    faults = FaultTrace(tuple(events),
+                        checkpoint_grain=float(rng.choice([0.0, 0.25])))
+    sc = _random_scenario(rng, nodes, faults=faults,
+                          with_mask=rng.random() < 0.3)
+    _differential(rng, sc, nodes, horizon=8.0, faults=faults)
+
+
+# --------------------------------------------------------------------------
+# crafted scenarios: exact numbers
+# --------------------------------------------------------------------------
+
+def _fleet(speeds, overhead=0.0):
+    return [SimNode(f"n{i}", [(0.0, s)], overhead)
+            for i, s in enumerate(speeds)]
+
+
+def test_crafted_single_burst_even_vs_hemt():
+    """Four 1.5-work requests in one 2 s window on a 2:1 fleet.  Even
+    mode splits the 6.0 decode 3.0/3.0 (slow node finishes at 2+3);
+    HeMT's probed estimator splits 4.0/2.0 so both replicas finish at
+    2+2 — the batch-level makespan claim with exact numbers."""
+    times = np.array([0.1, 0.5, 1.0, 1.9])
+    even = ServingScenario(_fleet((2.0, 1.0)), window=2.0, mode="even",
+                           slo=4.0, model=RequestModel(decode_work=1.5))
+    rep = even.run(times)
+    assert rep.result.outcomes["b0000000"].completion == _approx(5.0)
+    assert rep.latencies.max() == _approx(5.0 - 0.1)
+    assert rep.attainment == _approx(0.5)   # t=0.1, 0.5 miss the 4 s SLO
+
+    hemt = ServingScenario(_fleet((2.0, 1.0)), window=2.0, mode="hemt",
+                           slo=4.0, model=RequestModel(decode_work=1.5))
+    rep_h = hemt.run(times)
+    out = rep_h.result.outcomes["b0000000"]
+    assert out.completion == _approx(4.0)
+    assert out.planned[-1] == {"n0": _approx(4.0), "n1": _approx(2.0)}
+    assert rep_h.attainment == 1.0
+    assert rep_h.latencies.max() == _approx(3.9)
+
+
+def test_crafted_credit_exhaustion_resplit():
+    """Replica 0 burns its burst credits at t=2.5 (2.0x -> 0.4x).  The
+    first batch is split on probed t=0 speeds (2:1); its barrier
+    measures the throttled replica's realized throughput and the next
+    batch's split shifts toward the steady 1.0x machine."""
+    nodes = [SimNode("burst", [(0.0, 2.0), (2.5, 0.4)], 0.0),
+             SimNode("flat", [(0.0, 1.0)], 0.0)]
+    sc = ServingScenario(nodes, window=2.0, mode="hemt", alpha=0.0,
+                         model=RequestModel(decode_work=3.0))
+    times = np.array([0.5, 8.5])        # batch 0 at t=2, batch 4 at t=10
+    works, klass = sc.model.sample(2)
+    jobs, _ = sc.build_jobs(times, works, klass, 12.0)
+    res = ResidentCalendar(nodes).run(jobs)
+    o0, o1 = res.outcomes["b0000000"], res.outcomes["b0000004"]
+    p0, p1 = o0.planned[-1], o1.planned[-1]
+    assert p0["burst"] == _approx(2.0) and p0["flat"] == _approx(1.0)
+    # burst runs 1.0 work at 2.0x (t=2..2.5), the rest at 0.4x: 2.0 work
+    # over 3.0 s -> observed 2/3 vs flat's 1.0; completion t=5.
+    assert o0.completion == _approx(5.0)
+    # batch 4's replan: 3.0 * (2/3)/(5/3) = 1.2 on burst, 1.8 on flat
+    assert p1["burst"] == _approx(1.2) and p1["flat"] == _approx(1.8)
+    # burst's 1.2-work slice at 0.4x takes 3.0 s from t=10
+    assert o1.completion == _approx(13.0)
+    assert o1.stages[-1].work["burst"] == _approx(1.2)
+
+
+def test_crafted_stranded_batch_counts_as_dropped():
+    """Both replicas crash for good before the only batch dispatches:
+    its requests never complete — latency inf, attainment/goodput 0."""
+    nodes = _fleet((1.0, 1.0))
+    faults = FaultTrace((NodeCrash(0, 0.5), NodeCrash(1, 0.6)))
+    sc = ServingScenario(nodes, window=1.0, mode="even", slo=5.0,
+                         faults=faults)
+    rep = sc.run(np.array([0.2, 0.7]))
+    assert rep.n_completed == 0
+    assert np.all(np.isinf(rep.latencies))
+    assert rep.attainment == 0.0 and rep.goodput == 0.0
+
+
+def test_crafted_mask_keeps_forbidden_replica_idle():
+    """Class 1 may only use n1.  The unmasked class-0 sub-batch (ranked
+    first) takes the whole fleet and finishes at t=2; from then on BOTH
+    nodes are free, yet the masked sub-batch holds n1 alone — n0 idles
+    to the end because the compatibility mask prunes the grant."""
+    nodes = _fleet((1.0, 1.0))
+    sc = ServingScenario(nodes, window=1.0, mode="even",
+                         model=RequestModel(classes=2),
+                         mask={1: ["n1"]})
+    times = np.array([0.1, 0.2])
+    works = np.array([2.0, 2.0])
+    klass = np.array([0, 1])
+    jobs, groups = sc.build_jobs(times, works, klass, 2.0)
+    assert len(jobs) == 2
+    masked = [j for j in jobs if j.allowed is not None]
+    assert len(masked) == 1 and masked[0].allowed == frozenset({"n1"})
+    res = ResidentCalendar(nodes).run(jobs)
+    open_out = res.outcomes[[j.name for j in jobs
+                             if j.allowed is None][0]]
+    masked_out = res.outcomes[masked[0].name]
+    assert open_out.planned[-1] == {"n0": _approx(1.0),
+                                    "n1": _approx(1.0)}
+    assert open_out.completion == _approx(2.0)
+    assert masked_out.admitted_at == _approx(2.0)
+    assert masked_out.planned[-1] == {"n1": _approx(2.0)}
+    assert masked_out.completion == _approx(4.0)
+
+
+# --------------------------------------------------------------------------
+# report reductions
+# --------------------------------------------------------------------------
+
+def test_report_percentiles_and_goodput():
+    lat = np.array([1.0, 2.0, 3.0, np.inf])
+    rep = ServingReport(lat, np.zeros(4), slo=2.5, horizon=10.0,
+                        result=type("R", (), {"makespan": 8.0})())
+    assert rep.n_completed == 3
+    assert rep.p50 == _approx(2.5)
+    assert rep.attainment == _approx(0.5)
+    assert rep.goodput == _approx(0.2)    # 2 attained over max(10, 8) s
+    summary = rep.summary()
+    assert summary["n_requests"] == 4 and summary["attainment"] == 0.5
+
+
+# --------------------------------------------------------------------------
+# the bench ordering: HeMT beats HomT on tail latency and SLOs
+# --------------------------------------------------------------------------
+
+def test_bench_serving_orderings():
+    """The gated `serving` section's tentpole claim: capacity-
+    proportional batching beats even batching on p99 latency and SLO
+    attainment, with the clairvoyant oracle no worse than the adaptive
+    estimator (up to noise) on the flat fleet."""
+    from benchmarks.bench_serving import scenario_metrics
+
+    m = scenario_metrics()
+    for variant in ("flat", "burstable", "preempt"):
+        assert m[f"p99_{variant}_hemt"] < m[f"p99_{variant}_even"], variant
+        assert m[f"att_{variant}_hemt"] >= m[f"att_{variant}_even"], variant
+    assert m["p99_flat_oracle"] <= m["p99_flat_hemt"] + 1e-6
+    assert m["att_flat_hemt"] == 1.0
+
+
+# --------------------------------------------------------------------------
+# run_round: the closed-loop dispatch driver
+# --------------------------------------------------------------------------
+
+def test_run_round_observe_loop_converges():
+    nodes = _fleet((2.0, 1.0), overhead=0.0)
+    b = HeMTBatcher([nd.name for nd in nodes], alpha=0.0)
+    shares0, _ = run_round(b, nodes, 12, decode_work=1.0)
+    assert shares0 == {"n0": 6, "n1": 6}          # cold: even
+    shares1, sched = run_round(b, nodes, 12, decode_work=1.0)
+    assert shares1 == {"n0": 8, "n1": 4}          # learned 2:1
+    assert sched.completion == _approx(4.0)       # both finish together
+
+
+def test_run_round_speculation_hedges_straggler():
+    """A replica that collapses mid-round-1: the batcher flags it as
+    straggling and a speculative decode copy on an idle finished replica
+    caps round 2's makespan below the unhedged run."""
+    nodes = [SimNode("fast", [(0.0, 2.0)], 0.0),
+             SimNode("ok", [(0.0, 2.0)], 0.0),
+             SimNode("slow", [(0.0, 2.0), (1.0, 0.1)], 0.0)]
+    # min_share keeps the straggler fed (paper §5.1's averaging argument
+    # needs every replica observed) — which is exactly when hedging pays
+    b = HeMTBatcher([nd.name for nd in nodes], alpha=0.0, min_share=1)
+    run_round(b, nodes, 12)
+    assert b.straggling(factor=2.0) == ["slow"]
+    _, plain = run_round(b, nodes, 12, start_time=30.0)
+    b2 = HeMTBatcher([nd.name for nd in nodes], alpha=0.0, min_share=1)
+    run_round(b2, nodes, 12)
+    _, hedged = run_round(
+        b2, nodes, 12, start_time=30.0,
+        speculation=SpeculativeCopies(quantile=0.75, factor=1.5))
+    assert hedged.completion < plain.completion
+
+
+def test_run_round_validation():
+    nodes = _fleet((1.0,))
+    b = HeMTBatcher(["other"])
+    with pytest.raises(ValueError):
+        run_round(b, nodes, 4)
+    b2 = HeMTBatcher(["n0"])
+    with pytest.raises(ValueError):
+        run_round(b2, nodes, -1)
