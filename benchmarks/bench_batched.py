@@ -1,0 +1,129 @@
+"""Batched many-solve planner vs. the scalar closed-form loop.
+
+Each batched row solves a B-row stack of clusters in one vectorized pass
+(``repro.core.batched``) and carries the honest scalar comparison in its
+derived column: the same rows solved one ``run_job`` at a time — nodes
+constructed per row, solve LRU cleared so every row is a genuine solve,
+exactly what a Monte-Carlo planner pays today.  The acceptance bar is
+``speedup >= 5x`` (us-per-solve) at B=1000 on all three solvers.  The
+``dedup`` row measures the cross-batch de-dup (the batched demotion of
+the solve LRU) on a batch with few distinct rows, and ``plan_capacity``
+times the end-to-end Monte-Carlo planner sweep.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import BenchRow, timed
+from repro.core.batched import (
+    batched_closed_pull, batched_closed_pull_hetero, batched_closed_static,
+    plan_capacity,
+)
+from repro.core.engine import PullSpec, StaticSpec, run_job, run_job_cache_clear
+from repro.core.simulator import SimNode
+
+B = 1_000
+N = 8            # nodes per cluster row
+T = 256          # microtasks per pull row
+OVERHEAD = 0.01
+
+
+def _speeds(b: int = B, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).uniform(0.3, 2.0, (b, N))
+
+
+def _scalar_static(sp: np.ndarray, wk: np.ndarray) -> np.ndarray:
+    run_job_cache_clear()     # every row is a distinct solve; measure it
+    out = np.empty(sp.shape[0])
+    for b in range(sp.shape[0]):
+        nodes = [SimNode.constant(f"n{i}", s, OVERHEAD)
+                 for i, s in enumerate(sp[b])]
+        out[b] = run_job(nodes, [StaticSpec(works=tuple(wk[b]))]).completion
+    return out
+
+
+def _scalar_pull(sp: np.ndarray, specs: List[PullSpec]) -> np.ndarray:
+    run_job_cache_clear()
+    out = np.empty(sp.shape[0])
+    for b in range(sp.shape[0]):
+        nodes = [SimNode.constant(f"n{i}", s, OVERHEAD)
+                 for i, s in enumerate(sp[b])]
+        out[b] = run_job(nodes, [specs[b]]).completion
+    return out
+
+
+def rows() -> List[BenchRow]:
+    out = []
+    rng = np.random.default_rng(1)
+    sp = _speeds()
+
+    # --- closed-static: B x N macrotask splits ---------------------------
+    wk = rng.uniform(0.5, 5.0, (B, N))
+    res, us = timed(batched_closed_static, sp, wk, OVERHEAD, repeat=5)
+    scalar, us_sc = timed(_scalar_static, sp, wk, repeat=3)
+    assert np.allclose(res.makespan, scalar, rtol=0, atol=1e-9)
+    out.append(BenchRow(
+        f"batched/static_B{B}", us,
+        f"us_per_solve={us / B:.2f};scalar_us_per_solve={us_sc / B:.1f};"
+        f"speedup={us_sc / us:.1f}x"))
+
+    # --- closed-pull (uniform): B rows x T microtasks --------------------
+    twork = rng.uniform(0.1, 2.0, B)
+    uspecs = [PullSpec(n_tasks=T, task_work=float(w)) for w in twork]
+    res, us = timed(batched_closed_pull, sp, T, twork, OVERHEAD, repeat=3)
+    scalar, us_sc = timed(_scalar_pull, sp, uspecs, repeat=3)
+    assert np.allclose(res.makespan, scalar, rtol=0, atol=1e-9)
+    out.append(BenchRow(
+        f"batched/pull_uniform_B{B}", us,
+        f"us_per_solve={us / B:.2f};scalar_us_per_solve={us_sc / B:.1f};"
+        f"speedup={us_sc / us:.1f}x"))
+
+    # --- closed-pull-hetero: B rows x [T] work grids ---------------------
+    hwork = rng.uniform(0.1, 2.0, (B, T))
+    hspecs = [PullSpec(works=tuple(w)) for w in hwork]
+    res, us = timed(batched_closed_pull_hetero, sp, hwork, OVERHEAD, repeat=3)
+    scalar, us_sc = timed(_scalar_pull, sp, hspecs, repeat=3)
+    assert np.allclose(res.makespan, scalar, rtol=0, atol=1e-9)
+    out.append(BenchRow(
+        f"batched/pull_hetero_B{B}", us,
+        f"us_per_solve={us / B:.2f};scalar_us_per_solve={us_sc / B:.1f};"
+        f"speedup={us_sc / us:.1f}x"))
+
+    # --- cross-batch de-dup: B=10k rows, 16 distinct ---------------------
+    big = 10_000
+    base_sp = _speeds(16, seed=2)
+    base_wk = rng.uniform(0.1, 2.0, (16, T))
+    rep_sp = np.tile(base_sp, (big // 16, 1))
+    rep_wk = np.tile(base_wk, (big // 16, 1))
+    _, us_dd = timed(batched_closed_pull_hetero, rep_sp, rep_wk, OVERHEAD,
+                     repeat=3)
+    _, us_full = timed(
+        lambda: batched_closed_pull_hetero(rep_sp, rep_wk, OVERHEAD,
+                                           dedup=False), repeat=3)
+    out.append(BenchRow(
+        f"batched/dedup_B{big}", us_dd,
+        f"distinct=16;full_us={us_full:.0f};"
+        f"dedup_speedup={us_full / us_dd:.1f}x"))
+
+    # --- plan_capacity: Monte-Carlo planner sweep ------------------------
+    rep, us = timed(
+        lambda: plan_capacity((2.0, 1.0, 1.0, 0.5), 100.0, target=16.0,
+                              n_range=range(2, 13), samples=1_000, seed=7),
+        repeat=3)
+    solves = 1_000 * len(rep.quantiles)
+    out.append(BenchRow(
+        "batched/plan_capacity_11x1k", us,
+        f"chosen={rep.chosen};us_per_solve={us / solves:.2f};"
+        f"p99_at_chosen={rep.quantiles.get(rep.chosen, float('nan')):.2f}"))
+    return out
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    print_rows(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,8 @@ at 1k/10k/100k tasks (benchmarks.bench_sim_engine) and the kernel rows
 (benchmarks.bench_kernels) — so successive PRs can diff BENCH_sim.json.
 
 ``--check [PATH]`` re-runs only the gated sections — the sim_engine,
-speculation_io, faults, resident, and serving rows — and exits non-zero
-if any timed row
+speculation_io, faults, resident, serving, and batched rows — and exits
+non-zero if any timed row
 regressed by more than the threshold against the committed baseline (or
 vanished from the fresh run) — the ROADMAP CI gate.  The
 threshold defaults to 2x and can be overridden per environment —
@@ -46,6 +46,7 @@ MODULES = [
     "benchmarks.bench_serving",
     "benchmarks.bench_oa_hemt",
     "benchmarks.bench_sim_engine",
+    "benchmarks.bench_batched",
     "benchmarks.bench_kernels",
 ]
 
@@ -58,6 +59,7 @@ JSON_SECTIONS = {
     "benchmarks.bench_serving": "serving",
     "benchmarks.bench_oa_hemt": "oa_hemt",
     "benchmarks.bench_sim_engine": "sim",
+    "benchmarks.bench_batched": "batched",
     "benchmarks.bench_kernels": "kernels",
 }
 
@@ -68,6 +70,7 @@ GATED_SECTIONS = {
     "faults": "benchmarks.bench_faults",
     "resident": "benchmarks.bench_resident",
     "serving": "benchmarks.bench_serving",
+    "batched": "benchmarks.bench_batched",
 }
 
 DEFAULT_THRESHOLD = 2.0
@@ -129,7 +132,7 @@ def run_check(baseline_path: str, fresh_rows=None,
               threshold: "float | None" = None) -> int:
     """The ``--check`` CI gate: fresh rows of every gated section
     (``GATED_SECTIONS``: sim_engine + speculation_io + faults +
-    resident + serving) vs. the
+    resident + serving + batched) vs. the
     committed
     baseline.  ``fresh_rows`` can be injected for tests — either a dict
     ``{section: [row dicts]}`` (only the given sections are compared) or
@@ -189,7 +192,7 @@ def main() -> None:
                         default=None, metavar="PATH",
                         help="re-run the gated rows (sim_engine + "
                              "speculation_io + faults + resident + "
-                             "serving) and exit non-zero on "
+                             "serving + batched) and exit non-zero on "
                              "us_per_call regressions beyond the "
                              "threshold vs the given baseline JSON "
                              "(default: BENCH_sim.json)")

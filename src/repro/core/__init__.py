@@ -13,6 +13,8 @@ Submodules:
   simulator   — discrete-event cluster simulator (the paper's testbed)
   engine      — fast-path engine behind the simulator's stage runners
                 (event calendar + vectorized closed forms)
+  batched     — many-solve planner: the closed forms over [B, n] stacks
+                (numpy scan + jax.vmap core, Monte-Carlo plan_capacity)
   planner     — HeMT-DP grain planner used by the training runtime
 """
 from repro.core.estimators import (  # noqa: F401
@@ -29,6 +31,11 @@ from repro.core.skewed_hash import bucket_of, bucket_of_jnp, integer_capacities 
 from repro.core.engine import (  # noqa: F401
     AdaptivePlan, JobSchedule, PullSpec, StageSummary, StaticSpec, plan_path,
     run_job, run_job_cache_clear,
+)
+from repro.core.batched import (  # noqa: F401
+    BatchResult, CapacityReport, batched_closed_pull,
+    batched_closed_pull_hetero, batched_closed_static, dedup_rows,
+    plan_capacity,
 )
 from repro.core.speculation import (  # noqa: F401
     ReskewHandoff, SpeculativeCopies, WorkStealing,

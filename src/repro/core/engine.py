@@ -161,7 +161,8 @@ from repro.core.estimators import ARSpeedEstimator
 from repro.core.faults import ALIVE, DEAD, DRAINING, FaultTrace, lost_work
 from repro.core.partitioner import hemt_split_floats, proportional_split
 from repro.core.simulator import (
-    SimNode, SimTask, StageResult, TaskRecord, _stage_result,
+    SimNode, SimTask, StageColumns, StageResult, TaskRecord, _stage_result,
+    _stage_result_columns,
 )
 from repro.core.speculation import (
     ReskewHandoff, RunningAttempt, Speculate, fold_residual, is_event_policy,
@@ -834,11 +835,18 @@ def plan_path(nodes: Sequence[SimNode], queues: Sequence[Sequence[SimTask]],
     return _plan(nodes, queues, pull, uplink_bw)[0]
 
 
+def _empty_columns(names: Tuple[str, ...]) -> StageColumns:
+    z = np.empty(0, np.float64)
+    zi = np.empty(0, np.int64)
+    return StageColumns(zi, zi, z, z, z, names)
+
+
 def _closed_form_static(nodes: Sequence[SimNode], speeds: Sequence[float],
                         assignments: Sequence[Sequence[SimTask]],
                         start_time: float) -> StageResult:
-    keyed: List[Tuple[float, int, TaskRecord]] = []
+    names = tuple(nd.name for nd in nodes)
     node_finish = {}
+    ids_p, nidx_p, starts_p, ends_p, works_p = [], [], [], [], []
     for i, nd in enumerate(nodes):
         q = assignments[i]
         if not q:
@@ -850,13 +858,24 @@ def _closed_form_static(nodes: Sequence[SimNode], speeds: Sequence[float],
         starts[0] = start_time
         starts[1:] = ends[:-1]
         node_finish[nd.name] = float(ends[-1])
-        ends_l, starts_l, name = ends.tolist(), starts.tolist(), nd.name
-        keyed.extend(
-            (ends_l[j], i, TaskRecord(t.task_id, name, starts_l[j],
-                                      ends_l[j], t.cpu_work))
-            for j, t in enumerate(q))
-    keyed.sort(key=lambda e: (e[0], e[1]))   # oracle order: (time, node idx)
-    return _stage_result([r for _, _, r in keyed], node_finish, start_time)
+        ids_p.append(np.fromiter((t.task_id for t in q), np.int64,
+                                 count=len(q)))
+        nidx_p.append(np.full(len(q), i, np.int64))
+        starts_p.append(starts)
+        ends_p.append(ends)
+        works_p.append(work)
+    if ids_p:
+        ids = np.concatenate(ids_p)
+        nidx = np.concatenate(nidx_p)
+        starts = np.concatenate(starts_p)
+        ends = np.concatenate(ends_p)
+        works = np.concatenate(works_p)
+        order = np.lexsort((nidx, ends))     # oracle order: (time, node idx)
+        cols = StageColumns(ids[order], nidx[order], starts[order],
+                            ends[order], works[order], names)
+    else:
+        cols = _empty_columns(names)
+    return _stage_result_columns(cols, node_finish, start_time)
 
 
 def _pull_uniform_grid(periods: np.ndarray, n_tasks: int,
@@ -896,17 +915,17 @@ def _closed_form_pull_uniform(nodes: Sequence[SimNode], speeds: Sequence[float],
     ends = start_time + (pull_seq + 1) * periods[pull_node]
     counts = np.bincount(pull_node, minlength=n)
 
-    completion_order = np.lexsort((pull_node, ends)).tolist()
-    names = [nd.name for nd in nodes]
-    pn, starts_l, ends_l = pull_node.tolist(), starts.tolist(), ends.tolist()
-    records = [TaskRecord(tasks[m].task_id, names[pn[m]],
-                          starts_l[m], ends_l[m], work)
-               for m in completion_order]
+    order = np.lexsort((pull_node, ends))    # completion order
+    names = tuple(nd.name for nd in nodes)
+    ids = np.fromiter((t.task_id for t in tasks), np.int64, count=n_tasks)
+    cols = StageColumns(ids[order], pull_node[order], starts[order],
+                        ends[order], np.full(n_tasks, work, np.float64),
+                        names)
     node_finish = {
         nd.name: (start_time + float(counts[i] * periods[i])
                   if counts[i] else start_time)
         for i, nd in enumerate(nodes)}
-    return _stage_result(records, node_finish, start_time)
+    return _stage_result_columns(cols, node_finish, start_time)
 
 
 def _pull_hetero_heap(oh: Sequence[float], speeds: Sequence[float],
@@ -1062,16 +1081,16 @@ def _closed_form_pull_hetero(nodes: Sequence[SimNode], speeds: Sequence[float],
     batched path (``_pull_hetero_try_batched``)."""
     n, n_tasks = len(nodes), len(tasks)
     oh = [nd.task_overhead for nd in nodes]
+    names = tuple(nd.name for nd in nodes)
+    ids = np.fromiter((t.task_id for t in tasks), np.int64, count=n_tasks)
     batched = _pull_hetero_try_batched(oh, speeds, work, start_time, True)
     if batched is not None:
         node_end, _, _, (node_arr, start_arr, end_arr) = batched
-        names = [nd.name for nd in nodes]
-        records = list(map(TaskRecord, (t.task_id for t in tasks),
-                           (names[i] for i in node_arr.tolist()),
-                           start_arr.tolist(), end_arr.tolist(),
-                           (t.cpu_work for t in tasks)))
+        cols = StageColumns(ids, node_arr.astype(np.int64, copy=False),
+                            start_arr, end_arr,
+                            np.asarray(work, np.float64), names)
         node_finish = {names[i]: node_end[i] for i in range(n)}
-        return _stage_result(records, node_finish, start_time)
+        return _stage_result_columns(cols, node_finish, start_time)
     works = work.tolist()
     heap, cur_task = _pull_hetero_heap(oh, speeds, works, start_time)
     node_of = list(range(min(n, n_tasks))) + [0] * (n_tasks - min(n, n_tasks))
@@ -1094,12 +1113,12 @@ def _closed_form_pull_hetero(nodes: Sequence[SimNode], speeds: Sequence[float],
         e0, i = heapq.heappop(heap)
         end_of[cur_task[i]] = e0
         node_end[i] = e0
-    names = [nd.name for nd in nodes]
-    records = list(map(TaskRecord, (t.task_id for t in tasks),
-                       (names[i] for i in node_of), start_of, end_of,
-                       (t.cpu_work for t in tasks)))
+    cols = StageColumns(ids, np.asarray(node_of, np.int64),
+                        np.asarray(start_of, np.float64),
+                        np.asarray(end_of, np.float64),
+                        np.asarray(work, np.float64), names)
     node_finish = {names[i]: node_end[i] for i in range(n)}
-    return _stage_result(records, node_finish, start_time)
+    return _stage_result_columns(cols, node_finish, start_time)
 
 
 def _io_sym_schedule(n: int, n_tasks: int, io_mb: float, uplink_bw: float,
@@ -1140,17 +1159,19 @@ def _io_sym_schedule(n: int, n_tasks: int, io_mb: float, uplink_bw: float,
 def _closed_form_pull_io_sym(nodes: Sequence[SimNode],
                              tasks: Sequence[SimTask], uplink_bw: float,
                              start_time: float) -> StageResult:
-    n = len(nodes)
+    n, n_tasks = len(nodes), len(tasks)
     starts, ends, node_end, _ = _io_sym_schedule(
-        n, len(tasks), tasks[0].io_mb, uplink_bw, start_time,
+        n, n_tasks, tasks[0].io_mb, uplink_bw, start_time,
         _stripe_width(tasks, n))
-    names = [nd.name for nd in nodes]
-    starts_l, ends_l = starts.tolist(), ends.tolist()
-    records = [TaskRecord(t.task_id, names[k % n], starts_l[k], ends_l[k],
-                          t.cpu_work)
-               for k, t in enumerate(tasks)]
+    names = tuple(nd.name for nd in nodes)
+    cols = StageColumns(
+        np.fromiter((t.task_id for t in tasks), np.int64, count=n_tasks),
+        np.arange(n_tasks, dtype=np.int64) % n,
+        np.asarray(starts, np.float64), np.asarray(ends, np.float64),
+        np.fromiter((t.cpu_work for t in tasks), np.float64, count=n_tasks),
+        names)
     node_finish = {names[i]: node_end[i] for i in range(n)}
-    return _stage_result(records, node_finish, start_time)
+    return _stage_result_columns(cols, node_finish, start_time)
 
 
 # --------------------------------------------------------------------------
@@ -1344,14 +1365,20 @@ def _rel_summary_pull_uniform(oh: Sequence[float], speeds: Sequence[float],
 
 def _rel_summary_from_result(res: StageResult, names: Sequence[str],
                              start: float):
-    counts = {nm: 0 for nm in names}
-    works = {nm: 0.0 for nm in names}
-    for r in res.records:
-        counts[r.node] += 1
-        works[r.node] += r.cpu_work
+    """Per-node counts/works via the columnar view (a bincount — no
+    ``TaskRecord`` is materialized on closed-form results)."""
+    cols = res.columns()
+    n = len(names)
+    if cols.node_names == tuple(names):
+        nidx = cols.node_index
+    else:       # stage ran on a subset / different order of ``names``
+        idx_of = {nm: i for i, nm in enumerate(names)}
+        remap = np.asarray([idx_of[nm] for nm in cols.node_names], np.int64)
+        nidx = remap[cols.node_index]
+    counts = np.bincount(nidx, minlength=n)
+    works = np.bincount(nidx, weights=cols.works, minlength=n)
     offs = [res.node_finish[nm] - start for nm in names]
-    return _rel_from_offsets(offs, [counts[nm] for nm in names],
-                             [works[nm] for nm in names])
+    return _rel_from_offsets(offs, counts.tolist(), works.tolist())
 
 
 def _spec_tasks(spec) -> Sequence[Sequence[SimTask]]:

@@ -30,6 +30,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.capacity import BurstableNode
 
 
@@ -136,25 +138,97 @@ class TaskRecord(NamedTuple):
     cpu_work: float
 
 
-@dataclass
+class StageColumns(NamedTuple):
+    """Columnar view of a stage's completed attempts, in record order.
+
+    ``node_index`` indexes into ``node_names`` (stage node order), so batch
+    consumers can ``np.bincount`` per-node aggregates without touching a
+    single ``TaskRecord``.
+    """
+    task_ids: "np.ndarray"      # int64  [T]
+    node_index: "np.ndarray"    # int64  [T]
+    starts: "np.ndarray"        # float64 [T]
+    ends: "np.ndarray"          # float64 [T]
+    works: "np.ndarray"         # float64 [T] cpu work per attempt
+    node_names: Tuple[str, ...]
+
+
 class StageResult:
-    records: List[TaskRecord]
-    node_finish: Dict[str, float]
-    completion: float            # max end
-    # Claim 1 quantity: max finish - min finish over nodes that ran >= 1
-    # task (a node that never received work sits at start_time and would
-    # otherwise inflate the barrier-idle metric).
-    idle_time: float
+    """Stage outcome, lazy between two equivalent per-task representations.
+
+    The closed forms build **columnar** results (parallel numpy arrays, no
+    per-task Python objects); the event paths still build the legacy
+    ``TaskRecord`` list.  Whichever view a caller asks for is derived from
+    the other on first access and cached: ``.records`` materializes the
+    NamedTuples only when a record-consuming caller (driver counts-by-node,
+    scheduler steal accounting, tests) actually needs them, while
+    ``.columns()`` hands batch consumers (benchmarks, whole-job summaries,
+    serving sweeps) the arrays directly.
+    """
+
+    __slots__ = ("node_finish", "completion", "idle_time", "_records", "_cols")
+
+    def __init__(self, node_finish: Dict[str, float], completion: float,
+                 idle_time: float, *,
+                 records: Optional[List[TaskRecord]] = None,
+                 cols: Optional[StageColumns] = None):
+        if records is None and cols is None:
+            raise ValueError("StageResult needs records or cols")
+        self.node_finish = node_finish
+        self.completion = completion     # max end
+        # Claim 1 quantity: max finish - min finish over nodes that ran
+        # >= 1 task (a node that never received work sits at start_time
+        # and would otherwise inflate the barrier-idle metric).
+        self.idle_time = idle_time
+        self._records = records
+        self._cols = cols
 
     @property
     def makespan(self) -> float:
         return self.completion
 
+    @property
+    def records(self) -> List[TaskRecord]:
+        if self._records is None:
+            c = self._cols
+            names = c.node_names
+            self._records = [
+                TaskRecord(tid, names[ni], s, e, w)
+                for tid, ni, s, e, w in zip(
+                    c.task_ids.tolist(), c.node_index.tolist(),
+                    c.starts.tolist(), c.ends.tolist(), c.works.tolist())
+            ]
+        return self._records
+
+    def columns(self) -> StageColumns:
+        if self._cols is None:
+            rs = self._records
+            # node_finish insertion order == stage node order on every
+            # constructing path, so it doubles as the name table.
+            names = tuple(self.node_finish)
+            idx_of = {nm: i for i, nm in enumerate(names)}
+            m = len(rs)
+            self._cols = StageColumns(
+                np.fromiter((r.task_id for r in rs), np.int64, count=m),
+                np.fromiter((idx_of[r.node] for r in rs), np.int64, count=m),
+                np.fromiter((r.start for r in rs), np.float64, count=m),
+                np.fromiter((r.end for r in rs), np.float64, count=m),
+                np.fromiter((r.cpu_work for r in rs), np.float64, count=m),
+                names)
+        return self._cols
+
+    def __repr__(self) -> str:    # keep debugging output bounded
+        n = len(self._records) if self._records is not None \
+            else self._cols.task_ids.size
+        return (f"StageResult(n_records={n}, completion={self.completion!r}, "
+                f"idle_time={self.idle_time!r})")
+
 
 def _stage_result(records: List[TaskRecord], node_finish: Dict[str, float],
                   start_time: float) -> StageResult:
-    """Shared result assembly (legacy oracle + engine paths): idle time is
-    the finish spread over nodes that actually ran work, 0 if none did."""
+    """Shared result assembly (legacy oracle + engine event paths): idle
+    time is the finish spread over nodes that actually ran work, 0 if
+    none did."""
     ran = {r.node for r in records}
     if ran:
         finishes = [node_finish[name] for name in ran]
@@ -162,7 +236,22 @@ def _stage_result(records: List[TaskRecord], node_finish: Dict[str, float],
     else:
         idle = 0.0
     completion = max(node_finish.values()) if node_finish else start_time
-    return StageResult(records, node_finish, completion, idle)
+    return StageResult(node_finish, completion, idle, records=records)
+
+
+def _stage_result_columns(cols: StageColumns, node_finish: Dict[str, float],
+                          start_time: float) -> StageResult:
+    """Columnar twin of :func:`_stage_result` — the closed forms hand their
+    arrays straight in and no ``TaskRecord`` is built unless asked for."""
+    if cols.node_index.size:
+        ran = np.unique(cols.node_index)
+        fins = np.fromiter((node_finish[cols.node_names[i]] for i in ran),
+                           np.float64, count=ran.size)
+        idle = float(fins.max() - fins.min())
+    else:
+        idle = 0.0
+    completion = max(node_finish.values()) if node_finish else start_time
+    return StageResult(node_finish, completion, idle, cols=cols)
 
 
 # --------------------------------------------------------------------------

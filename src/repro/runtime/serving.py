@@ -50,7 +50,7 @@ stage.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -334,6 +334,21 @@ class ServingScenario:
             if out.status == "done":
                 latencies[idx] = out.completion - times[idx]
         return ServingReport(latencies, times, self.slo, horizon, result)
+
+
+def compare_modes(scenario: ServingScenario, trace,
+                  modes: Sequence[str] = MODES) -> Dict[str, "ServingReport"]:
+    """Run one trace under several batching modes, everything else held
+    fixed — the mode-comparison sweep the benchmarks and capacity studies
+    run.  Each mode gets a ``dataclasses.replace`` copy of ``scenario``
+    (the input is never mutated), and the reports ride the array path
+    end-to-end: latency columns come back as numpy arrays and the
+    closed forms underneath stay columnar — no ``TaskRecord`` is ever
+    materialized for the comparison."""
+    unknown = [m for m in modes if m not in MODES]
+    if unknown:
+        raise ValueError(f"unknown modes {unknown}; choose from {MODES}")
+    return {m: replace(scenario, mode=m).run(trace) for m in modes}
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,364 @@
+"""Batched many-solve planner vs. the scalar closed forms (tentpole suite).
+
+Randomized differential suites pin the three array-form solvers of
+``repro.core.batched`` — ``closed-static``, ``closed-pull`` (uniform) and
+``closed-pull-hetero`` — row by row against scalar
+:func:`repro.core.engine.run_job` at 1e-9: makespan, idle, per-node finish
+offsets and executed work, and task counts *exactly* (the batched argmin
+must reproduce the heap's ``(end, node)`` tie-break, not just its float
+totals).  Also covered: cross-batch de-dup equivalence (the batched
+demotion of the solve LRU), the jax scan twin under x64, the Monte-Carlo
+``plan_capacity`` planner, and the lazy columnar ``StageResult`` the
+refactor introduced underneath the engine's closed forms.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.batched import (
+    BatchResult, batched_closed_pull, batched_closed_pull_hetero,
+    batched_closed_static, dedup_rows, plan_capacity, pull_scan,
+)
+from repro.core.engine import (
+    PullSpec, StaticSpec, run_job, run_job_cache_clear,
+)
+from repro.core.simulator import SimNode, StageColumns, TaskRecord
+
+REL = ABS = 1e-9
+OVERHEAD = 0.01
+
+
+def _approx(x):
+    return pytest.approx(x, rel=REL, abs=ABS)
+
+
+def _nodes(speeds, overhead=OVERHEAD):
+    return [SimNode.constant(f"n{i}", float(s), overhead)
+            for i, s in enumerate(speeds)]
+
+
+def _pin_row(res: BatchResult, b: int, speeds, spec, overhead=OVERHEAD):
+    """One batched row vs. the scalar whole-job solve of the same stage."""
+    run_job_cache_clear()
+    nodes = _nodes(speeds, overhead)
+    sched = run_job(nodes, [spec])
+    summ = sched.stages[0]
+    assert res.makespan[b] == _approx(sched.completion)
+    assert res.idle[b] == _approx(summ.idle_time)
+    for i, nd in enumerate(nodes):
+        assert res.node_finish[b, i] == _approx(summ.node_finish[nd.name])
+        assert res.executed[b, i] == _approx(summ.work[nd.name])
+        assert res.counts[b, i] == summ.counts[nd.name]
+
+
+# --------------------------------------------------------------------------
+# randomized differential suites: batched vs. scalar closed forms at 1e-9
+# --------------------------------------------------------------------------
+
+@given(
+    n=st.integers(min_value=1, max_value=5),
+    work_vals=st.lists(st.floats(min_value=0.2, max_value=3.0),
+                       min_size=2, max_size=10),
+    overhead=st.floats(min_value=0.0, max_value=0.2),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_static_differential(n, work_vals, overhead, seed):
+    B = 4
+    rng = np.random.default_rng(seed)
+    sp = rng.uniform(0.2, 3.0, (B, n))
+    wk = rng.uniform(0.0, 4.0, (B, n))
+    wk[0, :] = (work_vals * n)[:n]     # one row from the drawn values
+    res = batched_closed_static(sp, wk, overhead)
+    for b in range(B):
+        _pin_row(res, b, sp[b], StaticSpec(works=tuple(wk[b])), overhead)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=5),
+    n_tasks=st.integers(min_value=1, max_value=40),
+    task_work=st.floats(min_value=0.05, max_value=2.0),
+    overhead=st.floats(min_value=0.0, max_value=0.2),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_pull_uniform_differential(n, n_tasks, task_work, overhead, seed):
+    if overhead == 0.0 and task_work == 0.0:
+        return      # zero-period grid is rejected by both paths
+    B = 3
+    sp = np.random.default_rng(seed).uniform(0.2, 3.0, (B, n))
+    res = batched_closed_pull(sp, n_tasks, task_work, overhead)
+    for b in range(B):
+        _pin_row(res, b, sp[b],
+                 PullSpec(n_tasks=n_tasks, task_work=task_work), overhead)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=5),
+    n_tasks=st.integers(min_value=0, max_value=40),
+    overhead=st.floats(min_value=0.0, max_value=0.2),
+    blocky=st.booleans(),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_pull_hetero_differential(n, n_tasks, overhead, blocky, seed):
+    B = 3
+    rng = np.random.default_rng(seed)
+    sp = rng.uniform(0.2, 3.0, (B, n))
+    if blocky:      # runs of equal sizes: the engine's run-length path
+        wk = np.repeat(rng.uniform(0.1, 2.0, (B, max(n_tasks // 4, 1))),
+                       4, axis=1)[:, :n_tasks]
+    else:
+        wk = rng.uniform(0.0, 3.0, (B, n_tasks))
+    res = batched_closed_pull_hetero(sp, wk, overhead)
+    for b in range(B):
+        _pin_row(res, b, sp[b], PullSpec(works=tuple(wk[b])), overhead)
+
+
+def test_pull_tie_break_matches_heap_exactly():
+    """Equal speeds make every pull a tie: counts must still agree with
+    the scalar heap's lowest-node-index resolution, node for node."""
+    for speeds in ([1.0] * 4, [1.0, 1.0, 2.0, 2.0], [0.5, 0.5]):
+        n_tasks = 23
+        sp = np.tile(speeds, (2, 1))
+        res = batched_closed_pull(sp, n_tasks, 0.7, OVERHEAD, dedup=False)
+        run_job_cache_clear()
+        nodes = _nodes(speeds)
+        summ = run_job(nodes, [PullSpec(n_tasks=n_tasks,
+                                        task_work=0.7)]).stages[0]
+        for i, nd in enumerate(nodes):
+            assert res.counts[0, i] == summ.counts[nd.name]
+            assert res.node_finish[0, i] == _approx(summ.node_finish[nd.name])
+
+
+def test_pull_scan_bitwise_matches_scalar_hetero():
+    """The batched scan is the scalar scan, not merely close to it: on the
+    same row, hetero finish times agree bitwise (== with no tolerance)."""
+    rng = np.random.default_rng(5)
+    sp = rng.uniform(0.2, 3.0, (1, 4))
+    wk = rng.uniform(0.0, 3.0, (1, 50))
+    res = batched_closed_pull_hetero(sp, wk, OVERHEAD, dedup=False)
+    run_job_cache_clear()
+    nodes = _nodes(sp[0])
+    summ = run_job(nodes, [PullSpec(works=tuple(wk[0]))]).stages[0]
+    for i, nd in enumerate(nodes):
+        assert res.node_finish[0, i] == summ.node_finish[nd.name]
+
+
+def test_empty_batches_and_zero_tasks():
+    res = batched_closed_pull_hetero([[1.0, 2.0]], np.empty((1, 0)))
+    assert res.makespan[0] == 0.0 and res.idle[0] == 0.0
+    assert res.counts.sum() == 0
+    res = batched_closed_pull([[1.0, 2.0]], 0, 1.0, OVERHEAD)
+    assert res.makespan[0] == 0.0
+
+
+def test_broadcasting_one_split_many_fleets():
+    """One split vector scored against B sampled fleets (and one fleet
+    against B work grids) broadcasts without materializing the stack."""
+    sp = np.random.default_rng(0).uniform(0.5, 2.0, (6, 3))
+    res = batched_closed_static(sp, np.array([3.0, 2.0, 1.0])[None, :])
+    assert res.makespan.shape == (6,)
+    grids = np.random.default_rng(1).uniform(0.1, 1.0, (5, 12))
+    res = batched_closed_pull_hetero([1.0, 0.5, 0.25], grids, OVERHEAD)
+    assert res.makespan.shape == (5,)
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        batched_closed_static([[0.0, 1.0]], [[1.0, 1.0]])
+    with pytest.raises(ValueError):
+        batched_closed_static([[1.0, 1.0]], [[-1.0, 1.0]])
+    with pytest.raises(ValueError):
+        batched_closed_pull([[1.0]], -1, 1.0)
+    with pytest.raises(ValueError):
+        batched_closed_pull_hetero([[1.0, 1.0]], [[1.0]], overheads=-0.1)
+    with pytest.raises(ValueError):
+        batched_closed_pull_hetero(np.ones((3, 2)), np.ones((2, 5)))
+
+
+# --------------------------------------------------------------------------
+# cross-batch de-dup (the solve LRU, demoted to one np pass per batch)
+# --------------------------------------------------------------------------
+
+def test_dedup_rows_first_occurrence():
+    key = np.array([[1.0, 2.0], [3.0, 4.0], [1.0, 2.0], [5.0, 6.0],
+                    [3.0, 4.0]])
+    uniq, inverse = dedup_rows(key)
+    assert uniq.tolist() == [0, 1, 3]
+    assert inverse.tolist() == [0, 1, 0, 2, 1]
+    assert np.array_equal(key[uniq][inverse], key)
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_dedup_solves_match_full_batch_exactly(seed):
+    """dedup=True must be invisible: bit-identical results to solving
+    every row, on a batch built to contain duplicates."""
+    rng = np.random.default_rng(seed)
+    base_sp = rng.uniform(0.2, 3.0, (4, 3))
+    base_wk = rng.uniform(0.0, 2.0, (4, 11))
+    idx = rng.integers(0, 4, 13)
+    sp, wk = base_sp[idx], base_wk[idx]
+    a = batched_closed_pull_hetero(sp, wk, OVERHEAD, dedup=True)
+    b = batched_closed_pull_hetero(sp, wk, OVERHEAD, dedup=False)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+    u = batched_closed_pull(sp, 9, 0.4, OVERHEAD, dedup=True)
+    v = batched_closed_pull(sp, 9, 0.4, OVERHEAD, dedup=False)
+    for x, y in zip(u, v):
+        assert np.array_equal(x, y)
+
+
+# --------------------------------------------------------------------------
+# jax scan twin
+# --------------------------------------------------------------------------
+
+def test_pull_scan_jax_matches_numpy():
+    jax = pytest.importorskip("jax")
+    from repro.core.batched import pull_scan_jax
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        rng = np.random.default_rng(3)
+        B, n, T = 7, 4, 29
+        oh = np.full((B, n), OVERHEAD)
+        sp = rng.uniform(0.2, 3.0, (B, n))
+        wk = rng.uniform(0.0, 3.0, (B, T))
+        ne, ct, ex = pull_scan(oh, sp, wk)
+        jne, jct, jex = pull_scan_jax(oh, sp, wk)
+        np.testing.assert_allclose(np.asarray(jne), ne, rtol=REL, atol=ABS)
+        assert np.array_equal(np.asarray(jct), ct)
+        np.testing.assert_allclose(np.asarray(jex), ex, rtol=REL, atol=ABS)
+        # fewer tasks than nodes: unprimed nodes report 0 finish, 0 count
+        ne, ct, _ = pull_scan(oh[:1, :], sp[:1, :], wk[:1, :2])
+        jne, jct, _ = pull_scan_jax(oh[:1, :], sp[:1, :], wk[:1, :2])
+        assert np.array_equal(np.asarray(jct), ct)
+        np.testing.assert_allclose(np.asarray(jne), ne, rtol=REL, atol=ABS)
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
+# --------------------------------------------------------------------------
+# plan_capacity: the Monte-Carlo planner on top
+# --------------------------------------------------------------------------
+
+def test_plan_capacity_deterministic_and_monotone():
+    kw = dict(target=20.0, n_range=range(2, 9), samples=200, seed=11)
+    a = plan_capacity([2.0, 1.0, 0.5], 60.0, **kw)
+    b = plan_capacity([2.0, 1.0, 0.5], 60.0, **kw)
+    assert a.chosen == b.chosen
+    for n in a.quantiles:
+        assert a.quantiles[n] == b.quantiles[n]
+        assert np.array_equal(a.makespans[n], b.makespans[n])
+    # cv=0 is deterministic: quantiles equal the closed-form solve and
+    # fall monotonically with fleet size
+    det = plan_capacity([1.0], 60.0, target=20.0, n_range=range(1, 7),
+                        cv=0.0, samples=50, overhead=OVERHEAD)
+    qs = [det.quantiles[n] for n in sorted(det.quantiles)]
+    assert all(x >= y - ABS for x, y in zip(qs, qs[1:]))
+    assert det.quantiles[3] == _approx(OVERHEAD + 60.0 / 3)
+    assert det.chosen == min(n for n, q in det.quantiles.items()
+                             if q <= 20.0)
+
+
+def test_plan_capacity_cv0_differential_vs_run_job():
+    """cv=0 collapses Monte-Carlo to the scalar closed forms: each mode's
+    quantile must equal the matching run_job solve of the mean fleet."""
+    pool, total, n = [2.0, 1.0, 0.5], 45.0, 5
+    means = np.asarray(pool)[np.arange(n) % 3]
+    rep = plan_capacity(pool, total, target=1.0, n_range=[n], cv=0.0,
+                        samples=3, overhead=OVERHEAD, mode="hemt")
+    run_job_cache_clear()
+    split = total * means / means.sum()
+    sched = run_job(_nodes(means), [StaticSpec(works=tuple(split))])
+    assert rep.quantiles[n] == _approx(sched.completion)
+    rep = plan_capacity(pool, total, target=1.0, n_range=[n], cv=0.0,
+                        samples=3, overhead=OVERHEAD, mode="homt",
+                        n_tasks=4 * n)
+    run_job_cache_clear()
+    sched = run_job(_nodes(means),
+                    [PullSpec(n_tasks=4 * n, task_work=total / (4 * n))])
+    assert rep.quantiles[n] == _approx(sched.completion)
+
+
+def test_plan_capacity_oracle_lower_envelope():
+    """The clairvoyant split never loses to the advertised-means split on
+    the same draws (same seed => same sampled speeds)."""
+    kw = dict(target=5.0, n_range=[4, 6], samples=300, seed=3, cv=0.4)
+    hemt = plan_capacity([2.0, 1.0], 80.0, mode="hemt", **kw)
+    oracle = plan_capacity([2.0, 1.0], 80.0, mode="oracle", **kw)
+    for n in hemt.quantiles:
+        assert oracle.quantiles[n] <= hemt.quantiles[n] + ABS
+
+
+def test_plan_capacity_unreachable_target():
+    rep = plan_capacity([1.0], 100.0, target=0.5, n_range=[1, 2],
+                        samples=20)
+    assert rep.chosen is None
+
+
+def test_plan_capacity_validation():
+    with pytest.raises(ValueError):
+        plan_capacity([1.0], 10.0, target=1.0, n_range=[1], mode="nope")
+    with pytest.raises(ValueError):
+        plan_capacity([], 10.0, target=1.0, n_range=[1])
+    with pytest.raises(ValueError):
+        plan_capacity([1.0], 10.0, target=0.0, n_range=[1])
+    with pytest.raises(ValueError):
+        plan_capacity([1.0], 10.0, target=1.0, n_range=[])
+    with pytest.raises(ValueError):
+        plan_capacity([1.0], 10.0, target=1.0, n_range=[0, 2])
+    with pytest.raises(ValueError):
+        plan_capacity([1.0], 10.0, target=1.0, n_range=[1], samples=0)
+    with pytest.raises(ValueError):
+        plan_capacity([1.0], 10.0, target=1.0, n_range=[1], cv=-0.1)
+
+
+# --------------------------------------------------------------------------
+# columnar StageResult: the lazy refactor underneath the closed forms
+# --------------------------------------------------------------------------
+
+def test_closed_form_results_are_columnar_and_lazy():
+    """Closed-form solves build columns; TaskRecords appear only on
+    .records access and match the columns field for field."""
+    from repro.core.simulator import run_pull_stage
+    from repro.core.simulator import SimTask
+    nodes = _nodes([1.0, 0.5, 2.0])
+    tasks = [SimTask(0.3 + 0.1 * (i % 5), task_id=i) for i in range(40)]
+    res = run_pull_stage(nodes, tasks)
+    assert res._records is None          # nothing materialized yet
+    cols = res.columns()
+    assert isinstance(cols, StageColumns)
+    assert cols.node_names == tuple(nd.name for nd in nodes)
+    recs = res.records
+    assert res.records is recs           # cached
+    assert len(recs) == len(tasks)
+    for j, r in enumerate(recs):
+        assert isinstance(r, TaskRecord)
+        assert r.task_id == cols.task_ids[j]
+        assert r.node == cols.node_names[cols.node_index[j]]
+        assert r.start == cols.starts[j]
+        assert r.end == cols.ends[j]
+        assert r.cpu_work == cols.works[j]
+
+
+def test_record_built_results_derive_columns():
+    """Event-path results (records-primary) produce the same columns the
+    records hold, using node_finish insertion order as the name table."""
+    from repro.core.engine import run_stage_events
+    from repro.core.simulator import SimTask
+    nodes = _nodes([1.0, 0.5])
+    tasks = [SimTask(0.5, task_id=i) for i in range(7)]
+    res = run_stage_events(nodes, [tasks], True)
+    assert res._cols is None
+    cols = res.columns()
+    assert res.columns() is cols         # cached
+    for j, r in enumerate(res.records):
+        assert cols.node_names[cols.node_index[j]] == r.node
+        assert cols.ends[j] == r.end and cols.works[j] == r.cpu_work
+
+
+def test_empty_stage_result_roundtrip():
+    from repro.core.engine import run_stage_events
+    res = run_stage_events(_nodes([1.0, 2.0]), [[]], True)
+    assert res.records == []
+    cols = res.columns()
+    assert cols.task_ids.size == 0
+    assert res.makespan == res.completion

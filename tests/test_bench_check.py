@@ -143,6 +143,46 @@ def test_run_check_gates_speculation_io_section(tmp_path, capsys):
     assert run_check(str(bare), fresh_rows=ok) == 0
 
 
+def test_batched_section_registered():
+    """The batched planner rows are wired into all three run.py tables:
+    they run with the full sweep, persist to BENCH_sim.json, and gate."""
+    from benchmarks.run import GATED_SECTIONS, JSON_SECTIONS, MODULES
+    assert "benchmarks.bench_batched" in MODULES
+    assert JSON_SECTIONS["benchmarks.bench_batched"] == "batched"
+    assert GATED_SECTIONS["batched"] == "benchmarks.bench_batched"
+
+
+def test_run_check_gates_batched_section(tmp_path, capsys):
+    """The --check gate covers the batched rows: a regressed solver row
+    fails, a vanished row fails, and a threshold override clears a
+    borderline regression — mirroring the speculation_io coverage."""
+    baseline = tmp_path / "BENCH_sim.json"
+    baseline.write_text(json.dumps({
+        "schema": 1, "sim": BASE,
+        "batched": [_row("batched/pull_hetero_B1000", 20_000.0),
+                    _row("batched/static_B1000", 300.0)]}))
+    ok = {"sim": [_row("sim_engine/pull_10000", 900.0),
+                  _row("sim_engine/job_pull_10x1000", 500.0)],
+          "batched": [_row("batched/pull_hetero_B1000", 30_000.0),
+                      _row("batched/static_B1000", 350.0)]}
+    assert run_check(str(baseline), fresh_rows=ok) == 0
+
+    regressed = {**ok,
+                 "batched": [_row("batched/pull_hetero_B1000", 90_000.0),
+                             _row("batched/static_B1000", 350.0)]}
+    assert run_check(str(baseline), fresh_rows=regressed) == 1
+    err = capsys.readouterr().err
+    assert "pull_hetero_B1000" in err and "REGRESSION" in err
+
+    vanished = {**ok, "batched": [_row("batched/static_B1000", 350.0)]}
+    assert run_check(str(baseline), fresh_rows=vanished) == 1
+    err = capsys.readouterr().err
+    assert "pull_hetero_B1000" in err and "missing" in err
+
+    # threshold override (CI headroom) clears the 4.5x-but-<6x regression
+    assert run_check(str(baseline), fresh_rows=regressed, threshold=6.0) == 0
+
+
 def test_run_check_missing_or_bad_baseline(tmp_path, capsys):
     assert run_check(str(tmp_path / "nope.json"), fresh_rows=[]) == 1
     assert "cannot read baseline" in capsys.readouterr().err

@@ -308,6 +308,31 @@ def test_crafted_single_burst_even_vs_hemt():
     assert rep_h.latencies.max() == _approx(3.9)
 
 
+def test_compare_modes_sweep():
+    """compare_modes runs one trace under every batching mode on replace()
+    copies: the input scenario is untouched, each report matches a direct
+    run of that mode, and the crafted 2:1 burst ordering (hemt beats even)
+    carries through the sweep."""
+    from repro.runtime.serving import compare_modes
+    times = np.array([0.1, 0.5, 1.0, 1.9])
+    sc = ServingScenario(_fleet((2.0, 1.0)), window=2.0, mode="even",
+                         slo=4.0, model=RequestModel(decode_work=1.5))
+    reports = compare_modes(sc, times)
+    assert set(reports) == {"hemt", "even", "oracle"}
+    assert sc.mode == "even"                      # input never mutated
+    assert reports["even"].attainment == _approx(0.5)
+    assert reports["hemt"].attainment == 1.0
+    assert reports["hemt"].p99 <= reports["even"].p99 + 1e-9
+    direct = ServingScenario(_fleet((2.0, 1.0)), window=2.0, mode="hemt",
+                             slo=4.0,
+                             model=RequestModel(decode_work=1.5)).run(times)
+    assert np.array_equal(reports["hemt"].latencies, direct.latencies)
+    sub = compare_modes(sc, times, modes=("oracle",))
+    assert list(sub) == ["oracle"]
+    with pytest.raises(ValueError, match="unknown modes"):
+        compare_modes(sc, times, modes=("hemt", "magic"))
+
+
 def test_crafted_credit_exhaustion_resplit():
     """Replica 0 burns its burst credits at t=2.5 (2.0x -> 0.4x).  The
     first batch is split on probed t=0 speeds (2:1); its barrier
