@@ -90,7 +90,7 @@ def resolve_threshold(cli: "float | None" = None) -> float:
         val = float(env)
     except ValueError:
         raise SystemExit(
-            f"BENCH_CHECK_THRESHOLD={env!r} is not a number")
+            f"BENCH_CHECK_THRESHOLD={env!r} is not a number") from None
     return _valid_threshold(val, f"BENCH_CHECK_THRESHOLD={env!r}")
 
 

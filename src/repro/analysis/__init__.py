@@ -1,0 +1,30 @@
+"""repro.analysis — hemt-lint, the engine's contract-enforcing analyzer.
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis.lint src          # text
+    PYTHONPATH=src python -m repro.analysis.lint --format=json src
+
+See :mod:`repro.analysis.base` for the rule protocol and waiver syntax,
+and the README "Static analysis" section for the rule table.
+"""
+from .base import (Finding, FileContext, Rule, all_rules, apply_waivers,
+                   get_rule, parse_waivers, register)
+
+__all__ = [
+    "Finding", "FileContext", "Rule", "register", "all_rules", "get_rule",
+    "parse_waivers", "apply_waivers",
+    "LintReport", "lint_paths", "lint_source", "main", "self_check",
+]
+
+_LINT_NAMES = {"LintReport", "lint_paths", "lint_source", "main",
+               "self_check"}
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.analysis.lint` must not find the submodule
+    # pre-imported by its own package (runpy RuntimeWarning)
+    if name in _LINT_NAMES:
+        from . import lint
+        return getattr(lint, name)
+    raise AttributeError(name)

@@ -1,0 +1,108 @@
+"""HL002: simulation code may only use seeded ``np.random.Generator``s.
+
+Every differential oracle in this repo pins the fast engine against a
+naive rescan at 1e-9 on *randomized* inputs, and every trace spec
+(``PoissonTrace`` …) promises bit-identical replay from its ``seed``
+field.  Both guarantees die the moment simulation code touches
+process-global RNG state: stdlib ``random.*``, the legacy
+``np.random.*`` module functions (one hidden global ``RandomState``),
+or an entropy-seeded ``default_rng()``.
+
+Scope: ``core/``, ``runtime/``, ``workloads/`` (the deterministic
+simulation layers).  ``jax.random`` is exempt — its keys are explicit
+and splitting is pure.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..base import (FileContext, Finding, from_imports, import_aliases,
+                    register)
+
+# the non-legacy surface of numpy.random: everything else on the module is
+# a hidden-global-state function (NPY002 territory)
+NUMPY_RANDOM_ALLOWED = frozenset({
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "SFC64",
+})
+
+
+@register
+class SeededRngRule:
+    code = "HL002"
+    name = "seeded-rng"
+    description = ("core/runtime/workloads must use seeded "
+                   "np.random.default_rng(seed); stdlib random and legacy "
+                   "np.random.* module functions are forbidden")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.is_test or not ctx.in_dir("core", "runtime", "workloads"):
+            return
+        tree = ctx.tree
+        np_aliases = import_aliases(tree, "numpy")
+        random_aliases = import_aliases(tree, "random")
+        # `from numpy import random [as npr]` behaves like the module
+        npr_aliases = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "numpy":
+                for a in node.names:
+                    if a.name == "random":
+                        npr_aliases.add(a.asname or a.name)
+
+        # from random import shuffle / from numpy.random import seed
+        for local, node in from_imports(tree, "random").items():
+            yield ctx.finding(
+                node, self.code,
+                f"stdlib random import ('{local}') draws from unseedable "
+                f"process-global state; use np.random.default_rng(seed)")
+        for local, node in from_imports(tree, "numpy.random").items():
+            if local not in NUMPY_RANDOM_ALLOWED:
+                yield ctx.finding(
+                    node, self.code,
+                    f"legacy np.random function import ('{local}') mutates "
+                    f"the hidden global RandomState; use "
+                    f"np.random.default_rng(seed)")
+
+        default_rng_names = {local for local in
+                             from_imports(tree, "numpy.random")
+                             if local == "default_rng"}
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            base = node.value
+            # random.shuffle(...) via `import random`
+            if isinstance(base, ast.Name) and base.id in random_aliases:
+                yield ctx.finding(
+                    node, self.code,
+                    f"stdlib random.{node.attr} draws from unseedable "
+                    f"process-global state; use np.random.default_rng(seed)")
+                continue
+            # np.random.X  /  (from numpy import random).X
+            is_np_random = (
+                (isinstance(base, ast.Attribute) and base.attr == "random"
+                 and isinstance(base.value, ast.Name)
+                 and base.value.id in np_aliases)
+                or (isinstance(base, ast.Name) and base.id in npr_aliases))
+            if is_np_random and node.attr not in NUMPY_RANDOM_ALLOWED:
+                yield ctx.finding(
+                    node, self.code,
+                    f"legacy np.random.{node.attr} mutates the hidden "
+                    f"global RandomState; use np.random.default_rng(seed)")
+
+        # unseeded default_rng(): entropy-seeded Generator breaks replay
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            is_default_rng = (
+                (isinstance(func, ast.Attribute)
+                 and func.attr == "default_rng")
+                or (isinstance(func, ast.Name)
+                    and func.id in default_rng_names))
+            if is_default_rng and not node.args and not node.keywords:
+                yield ctx.finding(
+                    node, self.code,
+                    "default_rng() with no seed draws OS entropy and breaks "
+                    "deterministic replay; pass an explicit seed")

@@ -1,0 +1,240 @@
+"""HL005: jax-traced code must stay tracer-safe.
+
+``kernels/`` and ``core/batched.py`` hold the jax twins of the numpy
+closed forms — the staging ground for the ROADMAP's Pallas port.  Code
+that traces today but concretizes a tracer (``if x > 0`` on a traced
+value, ``.item()``, ``float(x)``) or produces a data-dependent shape
+(``jnp.nonzero``, one-argument ``jnp.where``) fails only when the
+enclosing ``jit`` / ``vmap`` / ``scan`` finally lands — the worst
+possible time.  This rule flags those constructs *inside traced
+functions* so the twins keep their jit-ability invariant.
+
+What counts as traced (static heuristic, documented over-approximation):
+
+* functions decorated with ``@jit`` / ``@jax.jit`` / ``@vmap`` /
+  ``@pl.when(...)`` / ``@partial(jax.jit, ...)``,
+* functions passed (directly, via a name, or via a
+  ``functools.partial`` binding) to ``jit`` / ``vmap`` / ``pmap`` /
+  ``lax.scan`` / ``lax.cond`` / ``lax.while_loop`` / ``lax.fori_loop``
+  / ``lax.map`` / ``pl.pallas_call`` / ``checkpoint`` / ``remat``,
+* and every function nested inside one of those (closures trace too).
+
+Traced *values* are the function's positional parameters plus any local
+assigned from one.  Keyword-only parameters and names listed in the
+jit's ``static_argnames`` are static (python values at trace time), as
+are ``is None`` tests and ``isinstance`` checks.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from ..base import FileContext, Finding, dotted_name, names_in, register
+
+TRACE_ENTRY_FUNCS = frozenset({
+    "jit", "vmap", "pmap", "scan", "cond", "while_loop", "fori_loop",
+    "map", "pallas_call", "checkpoint", "remat", "associated_scan",
+    "associative_scan", "custom_vjp", "custom_jvp",
+})
+TRACING_DECORATORS = frozenset({"jit", "vmap", "pmap", "when",
+                                "checkpoint", "remat"})
+DATA_DEP_SHAPE_FUNCS = frozenset({
+    "nonzero", "flatnonzero", "argwhere", "unique", "extract", "compress",
+})
+CONCRETIZING_CASTS = frozenset({"float", "int", "bool", "complex"})
+
+
+def _last_component(node: ast.AST) -> Optional[str]:
+    d = dotted_name(node)
+    return d.split(".")[-1] if d else None
+
+
+def _decorator_static_argnames(dec: ast.AST) -> Set[str]:
+    """static_argnames=(...) from a (partial-wrapped) jit decorator."""
+    out: Set[str] = set()
+    if isinstance(dec, ast.Call):
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                for sub in ast.walk(kw.value):
+                    if isinstance(sub, ast.Constant) \
+                            and isinstance(sub.value, str):
+                        out.add(sub.value)
+    return out
+
+
+def _is_tracing_decorator(dec: ast.AST) -> bool:
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    name = _last_component(target)
+    if name in TRACING_DECORATORS:
+        return True
+    # @partial(jax.jit, ...) / @functools.partial(jit, ...)
+    if name == "partial" and isinstance(dec, ast.Call) and dec.args:
+        return _last_component(dec.args[0]) in TRACING_DECORATORS
+    return False
+
+
+def _collect_traced_roots(tree: ast.Module) -> Dict[str, Set[str]]:
+    """name -> static_argnames for every function the file traces."""
+    funcs: Dict[str, ast.FunctionDef] = {
+        n.name: n for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    traced: Dict[str, Set[str]] = {}
+
+    for name, fn in funcs.items():
+        for dec in fn.decorator_list:
+            if _is_tracing_decorator(dec):
+                traced.setdefault(name, set()).update(
+                    _decorator_static_argnames(dec))
+
+    # alias = f  /  alias = partial(f, ...) — resolve one level
+    alias_of: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            val = node.value
+            if isinstance(val, ast.Name) and val.id in funcs:
+                alias_of[node.targets[0].id] = val.id
+            elif isinstance(val, ast.Call) \
+                    and _last_component(val.func) == "partial" \
+                    and val.args and isinstance(val.args[0], ast.Name) \
+                    and val.args[0].id in funcs:
+                alias_of[node.targets[0].id] = val.args[0].id
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _last_component(node.func) not in TRACE_ENTRY_FUNCS:
+            continue
+        statics = _decorator_static_argnames(node)
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            target = None
+            if isinstance(arg, ast.Name):
+                target = alias_of.get(arg.id, arg.id)
+            elif isinstance(arg, ast.Call) \
+                    and _last_component(arg.func) == "partial" \
+                    and arg.args and isinstance(arg.args[0], ast.Name):
+                target = arg.args[0].id
+            if target in funcs:
+                traced.setdefault(target, set()).update(statics)
+    return traced
+
+
+def _traced_names(fn: ast.FunctionDef, statics: Set[str],
+                  inherited: Set[str]) -> Set[str]:
+    """Positional params + locals derived from them (fixpoint pass)."""
+    args = fn.args
+    names = {a.arg for a in (args.posonlyargs + args.args)} - statics
+    names |= inherited
+    if args.vararg:
+        names.add(args.vararg.arg)
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and (names_in(node.value)
+                                                 & names):
+                for tgt in node.targets:
+                    for sub in ast.walk(tgt):
+                        if isinstance(sub, ast.Name) \
+                                and sub.id not in names:
+                            names.add(sub.id)
+                            changed = True
+    return names
+
+
+def _is_static_test(test: ast.AST, traced: Set[str]) -> bool:
+    """is None / isinstance / no traced name referenced -> static."""
+    if not (names_in(test) & traced):
+        return True
+    if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return True
+    if isinstance(test, ast.Call) \
+            and _last_component(test.func) == "isinstance":
+        return True
+    return False
+
+
+@register
+class TracerSafetyRule:
+    code = "HL005"
+    name = "tracer-safety"
+    description = ("flag python control flow on traced values, .item(), "
+                   "concretizing casts, and data-dependent shapes inside "
+                   "jit/vmap/scan bodies in kernels/ and core/batched.py")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.is_test:
+            return
+        if not (ctx.in_dir("kernels")
+                or (ctx.in_dir("core") and ctx.name == "batched.py")):
+            return
+        roots = _collect_traced_roots(ctx.tree)
+        funcs = {n.name: n for n in ast.walk(ctx.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        # (fn, statics, inherited traced names); nested defs trace too
+        work: List = [(funcs[name], statics, set())
+                      for name, statics in roots.items() if name in funcs]
+        emitted: Set = set()        # a fn can be both a root and nested
+        while work:
+            fn, statics, inherited = work.pop()
+            traced = _traced_names(fn, statics, inherited)
+            for f in self._check_body(ctx, fn, traced):
+                key = (f.line, f.col, f.message)
+                if key not in emitted:
+                    emitted.add(key)
+                    yield f
+            for stmt in ast.walk(fn):
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and stmt is not fn:
+                    work.append((stmt, set(), traced))
+
+    def _check_body(self, ctx: FileContext, fn: ast.FunctionDef,
+                    traced: Set[str]) -> Iterable[Finding]:
+        nested = {n for sub in ast.walk(fn)
+                  if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and sub is not fn
+                  for n in ast.walk(sub)}
+        for node in ast.walk(fn):
+            if node in nested:        # reported by the nested visit
+                continue
+            if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+                test = node.test
+                if not _is_static_test(test, traced):
+                    kind = {ast.If: "if", ast.While: "while",
+                            ast.IfExp: "conditional expression",
+                            ast.Assert: "assert"}[type(node)]
+                    yield ctx.finding(
+                        node, self.code,
+                        f"python {kind} on traced value(s) "
+                        f"{sorted(names_in(test) & traced)} in traced "
+                        f"function '{fn.name}'; use lax.cond/jnp.where")
+            elif isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item":
+                    yield ctx.finding(
+                        node, self.code,
+                        f".item() concretizes a tracer in traced function "
+                        f"'{fn.name}'")
+                    continue
+                last = _last_component(node.func)
+                if last in CONCRETIZING_CASTS \
+                        and isinstance(node.func, ast.Name) and node.args \
+                        and (names_in(node.args[0]) & traced):
+                    yield ctx.finding(
+                        node, self.code,
+                        f"{last}() cast concretizes traced value(s) in "
+                        f"traced function '{fn.name}'; use .astype/jnp "
+                        f"ops instead")
+                elif last in DATA_DEP_SHAPE_FUNCS:
+                    yield ctx.finding(
+                        node, self.code,
+                        f"{last}() produces a data-dependent shape; not "
+                        f"jit-able inside traced function '{fn.name}'")
+                elif last == "where" and len(node.args) == 1:
+                    yield ctx.finding(
+                        node, self.code,
+                        f"one-argument where() produces a data-dependent "
+                        f"shape in traced function '{fn.name}'; pass "
+                        f"(cond, x, y)")

@@ -89,7 +89,8 @@ def _broadcast_overheads(overheads, shape) -> np.ndarray:
         oh = np.broadcast_to(oh, shape)
     except ValueError:
         raise ValueError(
-            f"overheads shape {oh.shape} does not broadcast to {shape}")
+            f"overheads shape {oh.shape} does not broadcast to "
+            f"{shape}") from None
     if np.any(oh < 0.0):
         raise ValueError("overheads must be >= 0")
     return oh

@@ -146,6 +146,18 @@ cascading through the rest of the stage (visible in the seed's Fig-5 rows at
 32/64 identical tasks).  The engine instead completes every task causally at
 ``max(io_finish, cpu_done)``.  Randomized differential tests draw continuous
 task sizes, where exact ties have measure zero and the oracle is sound.
+
+Enforced contracts (machine-checked by ``python -m repro.analysis.lint``,
+the ``hemt-lint`` CI job, and the tier-1 self-check in
+tests/test_analysis.py — rule table in the README "Static analysis"
+section): stage specs and everything reachable from them stay frozen and
+hashable because the solve LRU and ``batched.dedup_rows`` key by value
+(HL001); solver code never reads the wall clock or unseeded RNG — the
+1e-9 differential oracles depend on it (HL002/HL003); float ``==`` in
+solver modules is either a documented exact-routing guard or a bug
+(HL004); the jax twins stay tracer-safe for the Pallas port (HL005); and
+closed-form solvers never mutate parameter arrays, because cached solves
+are replayed (HL006).
 """
 from __future__ import annotations
 
@@ -774,7 +786,9 @@ def _stripe_width(tasks: Sequence[SimTask], n: int) -> int:
     if d > n or n % d or len(set(dns)) != d or any(x < 0 for x in dns):
         return 0
     for k, t in enumerate(tasks):
-        if t.datanode != dns[k % d] or t.io_mb != m:
+        # exact-routing guard: any io_mb inequality (even 1 ulp) just
+        # falls back to the event path, never to a wrong closed form
+        if t.datanode != dns[k % d] or t.io_mb != m:  # hemt-lint: disable=HL004
             return 0
     return d
 
@@ -980,7 +994,9 @@ def _pull_hetero_try_batched(oh: Sequence[float], speeds: Sequence[float],
     n = len(speeds)
     if n_tasks < 2 * _RUN_BATCH_MIN:
         return None
-    change = np.flatnonzero(np.diff(w_arr) != 0.0) + 1
+    # exact run-length grouping: works that differ by any amount are
+    # different runs; float noise only shrinks runs (slower, never wrong)
+    change = np.flatnonzero(np.diff(w_arr) != 0.0) + 1  # hemt-lint: disable=HL004
     bounds = np.concatenate(([0], change, [n_tasks]))
     n_runs = len(bounds) - 1
     if n_runs * _RUN_BATCH_MIN > n_tasks:

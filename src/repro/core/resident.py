@@ -810,8 +810,11 @@ class ResidentCalendar:
         if js.job.proportions is not None:
             weights = [js.job.proportions.get(nm, 1.0) for nm in names]
             return hemt_split_floats(total, weights)
+        # carry == 0.0 is the "no reskew residual" sentinel (set from the
+        # literal, never computed); a near-zero computed residual keeps
+        # the conservative re-split branch, which is still correct
         if (isinstance(spec, StaticSpec) and len(spec.works) == len(names)
-                and js.carry == 0.0):
+                and js.carry == 0.0):  # hemt-lint: disable=HL004
             return list(spec.works)
         return [total / len(names)] * len(names)
 
@@ -950,7 +953,9 @@ class ResidentCalendar:
     def _can_fast_forward(self, js: _JobState) -> bool:
         if self.recovery != "splice" or self._ext_left > 0:
             return False
-        if js.carry != 0.0:
+        # same carry sentinel as _base_split: nonzero residual (however
+        # small) must keep the event-by-event path, so exact is safe
+        if js.carry != 0.0:  # hemt-lint: disable=HL004
             return False
         if any(other is not js and other.active() for other in self.jobs):
             return False

@@ -50,7 +50,9 @@ class SimNode:
     task_overhead: float = 0.0          # seconds added per task
 
     def __post_init__(self):
-        if not self.profile or self.profile[0][0] != 0.0:
+        # constructor contract: profiles are authored literals and must
+        # start at exactly t=0; exact != is the validation, not arithmetic
+        if not self.profile or self.profile[0][0] != 0.0:  # hemt-lint: disable=HL004
             raise ValueError("profile must start at t=0")
         for (t0, _), (t1, _) in zip(self.profile, self.profile[1:]):
             if t1 <= t0:
@@ -466,7 +468,7 @@ def hemt_job(nodes: Sequence[SimNode], total_work: float,
     rng = np.random.default_rng(seed)
     s = sum(weights)
     assignments = []
-    for i, (nd, w) in enumerate(zip(nodes, weights)):
+    for i, (_nd, w) in enumerate(zip(nodes, weights)):
         dn = int(rng.integers(0, n_datanodes)) if io_mb_total > 0 else -1
         assignments.append([SimTask(total_work * w / s,
                                     io_mb_total * w / s, dn, task_id=i)])

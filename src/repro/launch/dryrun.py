@@ -133,7 +133,9 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              overrides: Optional[Dict[str, Any]] = None,
              tag: str = "") -> Dict[str, Any]:
-    t0 = time.time()
+    # real lowering/compile wall time for the dry-run report — host
+    # tooling measurement, not simulation state
+    t0 = time.time()  # hemt-lint: disable=HL003
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
                            "mesh": mesh_kind, "tag": tag}
     try:
@@ -143,9 +145,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
             rec["reason"] = res[-1]["skip"]
             return _write(rec, out_dir)
         lowered, ctx = res
-        t_lower = time.time() - t0
+        t_lower = time.time() - t0  # hemt-lint: disable=HL003  (compile timing)
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.time() - t0 - t_lower  # hemt-lint: disable=HL003  (compile timing)
 
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}

@@ -27,7 +27,7 @@ and the math both cost O(1) Python dispatches per step.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -45,17 +45,23 @@ from repro.runtime.train_loop import (
 )
 
 
-@dataclass
+@dataclass(frozen=True)
 class SliceSpec:
     """One data-parallel slice: name + virtual speed profile.
 
-    profile: [(t_start_seconds, relative_speed)] — the paper's node model
-    (static shares, interference injections, burstable two-segment).
+    profile: ((t_start_seconds, relative_speed), ...) — the paper's node
+    model (static shares, interference injections, burstable two-segment);
+    list inputs are coerced to tuples so specs stay hashable.
     grain_overhead: per-grain dispatch cost in seconds (the microtasking
     overhead term the paper analyzes)."""
     name: str
-    profile: List[Tuple[float, float]] = field(default_factory=lambda: [(0.0, 1.0)])
+    profile: Tuple[Tuple[float, float], ...] = ((0.0, 1.0),)
     grain_overhead: float = 0.05
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "profile",
+            tuple((float(t), float(s)) for t, s in self.profile))
 
 
 @dataclass
